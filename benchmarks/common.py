@@ -1,0 +1,49 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run_setting(env, pol, cfg, ota, mc_runs: int, seed: int = 0):
+    """Monte Carlo fedpg histories (vmapped); returns (rewards, grad_sq)."""
+    from repro.core import fedpg
+
+    hist = fedpg.monte_carlo(env, pol, cfg, jax.random.key(seed), mc_runs,
+                             ota=ota)
+    return hist.rewards, hist.grad_sq
+
+
+def final_reward(rewards: jnp.ndarray, tail: int = 20) -> float:
+    return float(jnp.mean(rewards[:, -tail:]))
+
+
+def avg_grad_sq(grad_sq: jnp.ndarray) -> float:
+    """(1/K) sum_k E||grad J||^2, averaged over MC runs (paper Fig. 2/5)."""
+    return float(jnp.mean(grad_sq))

@@ -1,0 +1,57 @@
+"""Paper Figs. 1-2: effect of batch size M and agent count N under the
+Rayleigh channel (alpha = 1e-4 in the paper; we use a slightly larger step
+and fewer MC runs to fit the CPU budget — trends, not absolute values, are
+the claim)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.ota_pg_particle import RAYLEIGH
+from repro.core.channel import make_channel
+from repro.core.ota import OTAConfig
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+
+from benchmarks.common import avg_grad_sq, emit, final_reward, run_setting
+
+SETTINGS = [  # (N, M)
+    (1, 10), (5, 10), (10, 10),   # N sweep at M=10  (Fig. 2 linear speedup)
+    (10, 1), (10, 5),             # M sweep at N=10  (Fig. 1)
+]
+
+
+def run(mc_runs: int = 5, n_rounds: int = 250, alpha: float = 1e-3):
+    env, pol = LandmarkNav(), MLPPolicy()
+    ota = OTAConfig(
+        channel=make_channel(RAYLEIGH.channel, **dict(RAYLEIGH.channel_kwargs)),
+        noise_sigma=RAYLEIGH.noise_sigma,
+        debias=True,
+    )
+    results = {}
+    for n, m in SETTINGS:
+        cfg = RAYLEIGH.fedpg(n_agents=n, batch_m=m, n_rounds=n_rounds)
+        cfg = type(cfg)(**{**cfg.__dict__, "alpha": alpha})
+        t0 = time.perf_counter()
+        rewards, grad_sq = run_setting(env, pol, cfg, ota, mc_runs)
+        dt = (time.perf_counter() - t0) * 1e6
+        results[(n, m)] = (final_reward(rewards), avg_grad_sq(grad_sq))
+        emit(
+            f"fig12_rayleigh_N{n}_M{m}", dt / mc_runs,
+            f"reward={results[(n, m)][0]:.3f};avg_grad_sq={results[(n, m)][1]:.4f}",
+        )
+
+    # derived claims
+    g = {k: v[1] for k, v in results.items()}
+    n_speedup = g[(1, 10)] / max(g[(10, 10)], 1e-9)
+    m_effect = g[(10, 1)] / max(g[(10, 10)], 1e-9)
+    emit(
+        "fig2_linear_speedup_N1_over_N10", 0.0,
+        f"ratio={n_speedup:.2f};claim=decreases_in_N;"
+        f"pass={g[(1,10)] > g[(5,10)] > g[(10,10)]}",
+    )
+    emit(
+        "fig1_batch_effect_M1_over_M10", 0.0,
+        f"ratio={m_effect:.2f};claim=decreases_in_M;"
+        f"pass={g[(10,1)] > g[(10,10)]}",
+    )
+    return g

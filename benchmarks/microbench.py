@@ -1,0 +1,73 @@
+"""Microbenchmarks: OTA aggregation forms and kernel-vs-ref timings (CPU
+wall time; kernel interpret mode is a correctness harness, not a speed
+claim — the derived column carries the analytic TPU expectation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ota
+from repro.core.channel import RayleighChannel
+from repro.kernels import ops, ref
+from repro.utils.roofline import HBM_BW
+
+from benchmarks.common import emit, time_call
+
+
+def run():
+    # --- OTA aggregation over a 1M-param gradient set --------------------
+    n_agents = 16
+    grads = {
+        "w1": jnp.ones((n_agents, 512, 512), jnp.float32),
+        "w2": jnp.ones((n_agents, 512, 1488), jnp.float32),
+    }
+    cfg = ota.OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
+                        debias=True)
+
+    agg = jax.jit(lambda k: ota.aggregate_stacked(cfg, k, grads)[0])
+    us = time_call(agg, jax.random.key(0))
+    n_bytes = sum(x.size * 4 for x in grads.values())
+    emit("ota_aggregate_stacked_1M", us,
+         f"agents={n_agents};bytes={n_bytes};"
+         f"tpu_mem_bound_est_us={n_bytes / HBM_BW * 1e6:.1f}")
+
+    exact = jax.jit(lambda: ota.exact_aggregate(grads))
+    emit("exact_aggregate_1M", time_call(exact),
+         "baseline=algorithm1_mean")
+
+    # --- fused OTA server update (Pallas) vs unfused jnp ------------------
+    v = jnp.ones((4096, 1024), jnp.float32)
+    fused = lambda: ops.ota_update(v, sigma=1e-3, n_agents=16, m_h=1.25,
+                                   use_pallas=True)
+    unfused = lambda: ops.ota_update(v, sigma=1e-3, n_agents=16, m_h=1.25,
+                                     use_pallas=False)
+    emit("ota_update_pallas_interpret_16MB", time_call(fused, iters=3),
+         "hbm_passes=2(fused)")
+    emit("ota_update_jnp_ref_16MB", time_call(unfused, iters=3),
+         "hbm_passes=4(noise_materialised)")
+
+    # --- attention: ref path timing + kernel check ------------------------
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    vv = jax.random.normal(ks[2], (1, 2, 512, 64))
+    ref_fn = jax.jit(lambda: ref.flash_attention_ref(q, k, vv))
+    emit("attention_ref_jnp_512", time_call(ref_fn),
+         "oracle=materialised_scores")
+    pallas_fn = lambda: ops.attention(q, k, vv, use_pallas=True)
+    emit("attention_pallas_interpret_512", time_call(pallas_fn, iters=2),
+         "mode=interpret(correctness_only)")
+
+    # --- SSD scan ----------------------------------------------------------
+    b, s, h, p, g, n = 1, 512, 4, 64, 1, 64
+    kk = jax.random.split(jax.random.key(2), 5)
+    x = jax.random.normal(kk[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.uniform(kk[2], (h,)))
+    B = jax.random.normal(kk[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(kk[4], (b, s, g, n)) * 0.5
+    ssd_ref_fn = jax.jit(lambda: ref.ssd_ref(x, dt, A, B, C, 128))
+    emit("ssd_ref_jnp_512", time_call(ssd_ref_fn), "chunk=128")
+    ssd_pl = lambda: ops.ssd(x, dt, A, B, C, chunk=128, use_pallas=True)
+    emit("ssd_pallas_interpret_512", time_call(ssd_pl, iters=2),
+         "mode=interpret(correctness_only)")

@@ -1,0 +1,41 @@
+"""Render the roofline table from the dry-run JSON records (§Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh) with the three terms, the dominant
+bottleneck, and the useful-FLOP ratio.  No compilation happens here."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        emit("roofline_table", 0.0, "status=no_dryrun_records_found")
+        return
+    n = 0
+    for path in files:
+        rec = json.load(open(path))
+        r = rec["roofline"]
+        if rec.get("calibrated") is None and rec["mesh"].startswith("pod2x"):
+            # multi-pod records are compile-proof only
+            emit(
+                f"dryrun_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+                0.0,
+                f"status=compiled;chips={rec['n_chips']}",
+            )
+            continue
+        emit(
+            f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+            r["step_time_s"] * 1e6,
+            f"dominant={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"useful_ratio={r['useful_flop_ratio']:.3f};mfu={r['mfu']:.4f}",
+        )
+        n += 1
+    emit("roofline_table_rows", 0.0, f"count={n}")

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig12,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (  # noqa: E402
+    et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami, microbench,
+    roofline_table, theory_table,
+)
+from benchmarks.common import emit
+
+SUITES = {
+    "fig12": lambda quick: fig12_rayleigh.run(
+        mc_runs=2 if quick else 5, n_rounds=120 if quick else 250),
+    "fig3": lambda quick: fig3_vs_vanilla.run(
+        mc_runs=2 if quick else 5, n_rounds=120 if quick else 250),
+    "fig45": lambda quick: fig45_nakagami.run(
+        mc_runs=2 if quick else 5, n_rounds=120 if quick else 250),
+    "theory": lambda quick: theory_table.run(
+        n_rounds=80 if quick else 150, mc_runs=2 if quick else 3),
+    "et": lambda quick: et_baseline.run(n_rounds=100 if quick else 200),
+    "micro": lambda quick: microbench.run(),
+    "roofline": lambda quick: roofline_table.run(),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+
+    names = [n for n in args.only.split(",") if n] or list(SUITES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for name in names:
+        try:
+            SUITES[name](args.quick)
+        except Exception as e:  # keep the harness running
+            failures.append(name)
+            emit(f"{name}_FAILED", 0.0, f"error={type(e).__name__}:{e}")
+    emit("total_wall", (time.time() - t0) * 1e6, f"suites={len(names)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

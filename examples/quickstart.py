@@ -1,0 +1,56 @@
+"""Quickstart: the paper's algorithm in ~40 lines.
+
+Runs Algorithm 2 (over-the-air federated policy gradient) on the paper's
+landmark-navigation task with a Rayleigh fading channel, and compares it to
+Algorithm 1 (exact aggregation).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedpg
+from repro.core.channel import make_channel, noise_sigma_from_db
+from repro.core.ota import OTAConfig
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+
+
+def main():
+    env = LandmarkNav()
+    policy = MLPPolicy(obs_dim=4, hidden=16, n_actions=5)  # the paper's net
+
+    cfg = fedpg.FedPGConfig(
+        n_agents=10,       # N
+        batch_m=10,        # M
+        horizon=20,        # T  (paper, Section IV)
+        gamma=0.99,
+        alpha=5e-3,
+        n_rounds=300,      # K
+    )
+
+    # Algorithm 2: over-the-air aggregation through a Rayleigh channel with
+    # sigma^2 = -60 dB receiver noise (the paper's setting).
+    ota = OTAConfig(
+        channel=make_channel("rayleigh"),
+        noise_sigma=noise_sigma_from_db(-60.0),
+        debias=True,
+    )
+
+    print("running Algorithm 2 (OTA, Rayleigh)...")
+    _, h_ota = fedpg.run_jit(env, policy, cfg, jax.random.key(0), ota=ota)
+    print("running Algorithm 1 (exact uplink)...")
+    _, h_exact = fedpg.run_jit(env, policy, cfg, jax.random.key(0))
+
+    for name, h in [("OTA", h_ota), ("exact", h_exact)]:
+        r0 = float(jnp.mean(h.rewards[:20]))
+        r1 = float(jnp.mean(h.rewards[-20:]))
+        gsq = float(jnp.mean(h.grad_sq))
+        print(f"  {name:6s} reward {r0:7.3f} -> {r1:7.3f}   "
+              f"(1/K) sum ||grad J||^2 = {gsq:.4f}")
+    print("OTA converges at the same order as the exact uplink (paper Fig. 3)"
+          " while using a single shared channel use per round.")
+
+
+if __name__ == "__main__":
+    main()

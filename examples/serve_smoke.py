@@ -1,0 +1,66 @@
+"""Serving example: prefill a prompt then decode with a batched KV cache,
+including the sliding-window ring cache used for long-context serving.
+
+    PYTHONPATH=src python examples/serve_smoke.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import InputShape
+from repro.models import model as model_lib
+from repro.train import server
+
+
+def main():
+    cfg = get_smoke_config("internlm2-20b")
+    model = model_lib.build(cfg)
+    params = model.init(jax.random.key(0))
+
+    b, prompt_len, gen = 4, 48, 32
+    prompt = jax.random.randint(jax.random.key(1), (b, prompt_len), 0, cfg.vocab)
+
+    # prefill fills the cache in one pass...
+    logits, cache = model.prefill(params, prompt)
+    # ...but serving uses a fixed-capacity cache; copy the prefill KV in.
+    cap = prompt_len + gen
+    full = model.init_cache(b, cap)
+    full = full._replace(
+        kv=jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice(
+                dst, src, (0,) * dst.ndim
+            ),
+            full.kv, cache.kv,
+        ),
+        pos=jnp.asarray(prompt_len, jnp.int32),
+    )
+
+    shape = InputShape("serve", seq_len=cap, global_batch=b, kind="decode")
+    step = jax.jit(server.make_serve_step(model, shape))
+
+    tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        tok, _, full = step(params, full, tok)
+        out.append(tok)
+    dt = time.time() - t0
+    gen_tokens = jnp.concatenate(out, axis=1)
+    print(f"generated {gen_tokens.shape} tokens in {dt:.2f}s "
+          f"({b*(gen-1)/dt:.1f} tok/s on CPU)")
+    print("first sequence:", gen_tokens[0].tolist())
+
+    # long-context style: ring cache of capacity 32 (window serving)
+    ring = model.init_cache(b, 32)
+    ring = ring._replace(pos=jnp.asarray(500, jnp.int32))  # deep in a stream
+    rstep = jax.jit(server.make_serve_step(
+        model, InputShape("long", seq_len=10_000, global_batch=b, kind="decode")))
+    tok2, _, ring = rstep(params, ring, tok)
+    print(f"ring-cache decode at pos 500 with 32 slots -> next pos "
+          f"{int(ring.pos)} OK")
+
+
+if __name__ == "__main__":
+    main()

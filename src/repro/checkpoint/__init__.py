@@ -1,0 +1,2 @@
+"""Pytree checkpointing to .npz with structure metadata."""
+from repro.checkpoint.checkpoint import latest_step, restore, save  # noqa: F401

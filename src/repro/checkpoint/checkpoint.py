@@ -1,0 +1,148 @@
+"""Simple, dependency-free checkpointing.
+
+Flattens a pytree with '/'-joined key paths into a single ``.npz`` per step
+(atomic rename) plus a tiny JSON manifest recording the treedef, dtypes and
+the step number.  Restore rebuilds the exact pytree structure; a target
+"like" tree may be supplied to validate shapes/dtypes against.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)\.npz$")
+
+# numpy's npz format can't round-trip ml_dtypes (bf16/f8) natively; store the
+# raw bits as a same-width integer and re-view on restore via the manifest.
+_BITS_VIEW = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _to_storable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _BITS_VIEW:
+        return arr.view(_BITS_VIEW[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _BITS_VIEW:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _flatten(tree: PyTree):
+    flat = {}
+
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        flat[_fmt(path)] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    """Write step_<step>.npz atomically; returns the path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    storable, dtypes = {}, {}
+    for k, v in flat.items():
+        storable[k], dtypes[k] = _to_storable(v)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "dtypes": dtypes,
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+    }
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **storable)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    with open(os.path.join(ckpt_dir, f"step_{step}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.match(name))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree) -> PyTree:
+    """Load step_<step>.npz into the structure of ``like`` (shape-checked)."""
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with open(os.path.join(ckpt_dir, f"step_{step}.json")) as f:
+        manifest = json.load(f)
+    with np.load(path) as data:
+        flat = {
+            k: _from_storable(data[k], manifest["dtypes"].get(k, str(data[k].dtype)))
+            for k in data.files
+        }
+
+    ref = _flatten(like)
+    missing = set(ref) - set(flat)
+    extra = set(flat) - set(ref)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    for k, v in ref.items():
+        if tuple(flat[k].shape) != tuple(v.shape):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {flat[k].shape} vs model {v.shape}"
+            )
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    new_leaves = [
+        flat[_fmt(path)].astype(np.asarray(leaf).dtype)
+        for path, leaf in leaves_paths
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

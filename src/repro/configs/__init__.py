@@ -1,0 +1,40 @@
+"""Architecture configs (one module per assigned architecture) + input shapes.
+
+``get_config(arch_id)`` resolves any of the 10 assigned architectures (plus
+the paper's own RL config) by id; ``repro.configs.shapes`` defines the 4
+assigned input shapes.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig  # noqa: F401
+
+ARCH_IDS = (
+    "seamless-m4t-large-v2",
+    "granite-moe-1b-a400m",
+    "llama-3.2-vision-11b",
+    "internlm2-20b",
+    "starcoder2-15b",
+    "mamba2-130m",
+    "mixtral-8x22b",
+    "zamba2-7b",
+    "deepseek-67b",
+    "llama3.2-3b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> "ModelConfig":
+    """Full-size config for an assigned architecture id."""
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> "ModelConfig":
+    """Reduced same-family config (<=2 layers, d_model<=512, <=4 experts)."""
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).SMOKE_CONFIG

@@ -1,0 +1,16 @@
+"""Core contribution of the paper: over-the-air federated policy gradient.
+
+Public API:
+    channel   — fading-channel models (Rayleigh, Nakagami-m, ...) with exact
+                (m_h, sigma_h^2) statistics used by the theory.
+    ota       — the over-the-air aggregation primitive (Eq. 6-7), in three
+                mathematically equivalent forms (stacked / shard_map-psum /
+                channel-weighted-loss) plus the exact Algorithm-1 baseline.
+    gpomdp    — REINFORCE and mini-batch G(PO)MDP gradient estimators (Eq. 4).
+    theory    — smoothness constant L, bound constant V, Theorem 1/2 right-
+                hand sides and Corollary 1 complexity calculators.
+    fedpg     — Algorithm 1 (federated PG) and Algorithm 2 (OTA federated PG)
+                training loops.
+    power_control — transmit-power policies (truncated channel inversion).
+"""
+from repro.core import channel, fedpg, gpomdp, ota, power_control, theory  # noqa: F401

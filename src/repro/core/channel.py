@@ -1,0 +1,180 @@
+"""Fading-channel models for over-the-air aggregation.
+
+Each model samples the per-agent, per-round channel gain ``h_{i,k}`` of
+Eq. (6) and exposes the exact first/second moments ``(m_h, sigma_h^2)`` the
+convergence theory (Theorems 1 and 2) is stated in terms of.
+
+The paper's two simulation settings are provided verbatim:
+
+* ``RayleighChannel(scale=1)`` — m_h = sqrt(pi/2), sigma_h^2 = (4-pi)/2,
+  which satisfies the Theorem-1 condition sigma_h^2 <= (N+1) m_h^2 for all N.
+* ``NakagamiChannel(m=0.1, omega=1)`` — sigma_h^2 = 10 m_h^2, violating the
+  Theorem-1 condition for small N; Theorem 2 applies.
+
+``h_{i,k} = c_{i,k} * p_{i,k}`` (actual gain x transmit-power coefficient);
+power control policies that shape p live in ``power_control.py``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Channel:
+    """Base class: a distribution over non-negative gains h."""
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        raise NotImplementedError
+
+    @property
+    def mean(self) -> float:  # m_h
+        raise NotImplementedError
+
+    @property
+    def var(self) -> float:  # sigma_h^2
+        raise NotImplementedError
+
+    @property
+    def second_moment(self) -> float:
+        return self.var + self.mean**2
+
+    def satisfies_theorem1(self, n_agents: int) -> bool:
+        """The Theorem-1 channel condition sigma_h^2 <= (N+1) m_h^2."""
+        return self.var <= (n_agents + 1) * self.mean**2
+
+
+@dataclass(frozen=True)
+class IdealChannel(Channel):
+    """h == 1 deterministically: recovers exact (TDMA/FDMA) aggregation."""
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        return jnp.ones(shape, jnp.float32)
+
+    @property
+    def mean(self) -> float:
+        return 1.0
+
+    @property
+    def var(self) -> float:
+        return 0.0
+
+
+@dataclass(frozen=True)
+class FixedGainChannel(Channel):
+    """h == gain deterministically (distortion without randomness)."""
+
+    gain: float = 1.0
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        return jnp.full(shape, self.gain, jnp.float32)
+
+    @property
+    def mean(self) -> float:
+        return self.gain
+
+    @property
+    def var(self) -> float:
+        return 0.0
+
+
+@dataclass(frozen=True)
+class RayleighChannel(Channel):
+    """Rayleigh(scale): pdf h/s^2 exp(-h^2/(2 s^2)).
+
+    mean = s*sqrt(pi/2); var = (4-pi)/2 * s^2.  The paper uses s=1.
+    """
+
+    scale: float = 1.0
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        # If X, Y ~ N(0, s^2) iid then ||(X, Y)|| ~ Rayleigh(s).
+        z = jax.random.normal(key, shape + (2,), jnp.float32)
+        return self.scale * jnp.sqrt(jnp.sum(z * z, axis=-1))
+
+    @property
+    def mean(self) -> float:
+        return self.scale * math.sqrt(math.pi / 2.0)
+
+    @property
+    def var(self) -> float:
+        return (4.0 - math.pi) / 2.0 * self.scale**2
+
+
+@dataclass(frozen=True)
+class NakagamiChannel(Channel):
+    """Nakagami-m *power* gain: h ~ Gamma(shape=m, scale=omega/m).
+
+    The paper states "Nakagami-m channel with m=0.1 and Omega=1, which
+    satisfies sigma_h^2 = 10 m_h^2" — that identity holds exactly for the
+    squared-envelope (power) gain, h = |amplitude|^2 ~ Gamma(m, Omega/m):
+    mean = Omega, var = Omega^2/m.  (The amplitude convention would give
+    sigma_h^2 ~= 3.1 m_h^2 instead, contradicting the paper's Section IV.)
+    """
+
+    m: float = 0.1
+    omega: float = 1.0
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        return jax.random.gamma(key, self.m, shape, jnp.float32) * (
+            self.omega / self.m
+        )
+
+    @property
+    def mean(self) -> float:
+        return self.omega
+
+    @property
+    def var(self) -> float:
+        return self.omega**2 / self.m
+
+
+@dataclass(frozen=True)
+class LogNormalChannel(Channel):
+    """Log-normal shadowing: h = exp(mu + sigma Z). Beyond-paper extra."""
+
+    mu: float = 0.0
+    sigma: float = 0.25
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        z = jax.random.normal(key, shape, jnp.float32)
+        return jnp.exp(self.mu + self.sigma * z)
+
+    @property
+    def mean(self) -> float:
+        return math.exp(self.mu + self.sigma**2 / 2.0)
+
+    @property
+    def var(self) -> float:
+        return (math.exp(self.sigma**2) - 1.0) * math.exp(2 * self.mu + self.sigma**2)
+
+
+_REGISTRY = {
+    "ideal": IdealChannel,
+    "fixed": FixedGainChannel,
+    "rayleigh": RayleighChannel,
+    "nakagami": NakagamiChannel,
+    "lognormal": LogNormalChannel,
+}
+
+
+def make_channel(name: str, **kwargs) -> Channel:
+    """Factory: make_channel('rayleigh'), make_channel('nakagami', m=0.1)."""
+    try:
+        return _REGISTRY[name](**kwargs)
+    except KeyError as e:
+        raise ValueError(
+            f"unknown channel {name!r}; choose from {sorted(_REGISTRY)}"
+        ) from e
+
+
+def noise_sigma_from_db(db: float) -> float:
+    """sigma for AWGN given noise power in dB: sigma^2 = 10^(db/10).
+
+    The paper sets sigma^2 = -60 dB => sigma^2 = 1e-6.
+    """
+    return math.sqrt(10.0 ** (db / 10.0))

@@ -1,0 +1,135 @@
+"""Algorithm 1 (federated PG) and Algorithm 2 (over-the-air federated PG).
+
+Fully-jitted loops: each communication round samples N agents x M
+trajectories (vmap x vmap over independent PRNG streams), forms per-agent
+mini-batch G(PO)MDP estimates (Eq. 4), aggregates — exactly (Algorithm 1) or
+through the simulated fading channel (Algorithm 2, Eq. 6-7) — and applies the
+server update.  ``lax.scan`` carries theta across the K rounds so a whole
+training run is a single XLA program.
+
+Per-round metrics (the paper's Figs. 1-5):
+    reward   — empirical cumulative (discounted) reward, averaged over all
+               N*M freshly-sampled trajectories;
+    grad_sq  — ||(1/N) sum_i grad_hat J_i||^2, the best available estimate of
+               ||grad J(theta^k)||^2 (Fig. 2/5's y-axis before K-averaging).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gpomdp
+from repro.core.ota import OTAConfig, aggregate_stacked, exact_aggregate
+from repro.rl.sampler import empirical_reward, rollout_batch
+from repro.utils.tree import tree_global_norm_sq
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class FedPGConfig:
+    n_agents: int = 10           # N
+    batch_m: int = 10            # M (trajectories per agent per round)
+    horizon: int = 20            # T
+    gamma: float = 0.99
+    alpha: float = 1e-4          # step size
+    n_rounds: int = 200          # K
+    estimator: str = "gpomdp"    # or "reinforce"
+
+
+class History(NamedTuple):
+    rewards: jax.Array    # (K,)
+    grad_sq: jax.Array    # (K,)
+    gain_mean: jax.Array  # (K,) mean sampled h per round (1.0 for exact)
+
+
+def _estimator_grad(cfg: FedPGConfig):
+    if cfg.estimator == "gpomdp":
+        return gpomdp.gpomdp_gradient
+    if cfg.estimator == "reinforce":
+        return gpomdp.reinforce_gradient
+    raise ValueError(f"unknown estimator {cfg.estimator!r}")
+
+
+def make_round_fn(env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig]):
+    """One communication round: (theta, key) -> (theta', metrics)."""
+
+    grad_fn = _estimator_grad(cfg)
+
+    def round_fn(theta: PyTree, key: jax.Array):
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+
+        # --- local sampling + estimation (parallel across agents) --------
+        def agent_grad(k):
+            traj = rollout_batch(env, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        grads, trajs = jax.vmap(agent_grad)(agent_keys)   # leading N axis
+
+        # --- uplink + server update --------------------------------------
+        if ota_cfg is None:
+            update = exact_aggregate(grads)
+            gain_mean = jnp.ones(())
+        else:
+            update, h = aggregate_stacked(ota_cfg, key_chan, grads)
+            gain_mean = jnp.mean(h)
+        theta_next = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
+
+        # --- metrics ------------------------------------------------------
+        reward = empirical_reward(trajs, cfg.gamma)
+        grad_sq = tree_global_norm_sq(exact_aggregate(grads))
+        return theta_next, (reward, grad_sq, gain_mean)
+
+    return round_fn
+
+
+def run(
+    env,
+    policy,
+    cfg: FedPGConfig,
+    key: jax.Array,
+    *,
+    ota: Optional[OTAConfig] = None,
+    theta0: Optional[PyTree] = None,
+):
+    """Run K rounds; returns (theta_K, History).
+
+    ``ota=None`` is Algorithm 1 (exact aggregation); an ``OTAConfig`` is
+    Algorithm 2 over the configured channel.
+    """
+    key_init, key_scan = jax.random.split(key)
+    theta = policy.init(key_init) if theta0 is None else theta0
+    round_fn = make_round_fn(env, policy, cfg, ota)
+
+    def body(carry, key_k):
+        theta = carry
+        theta, metrics = round_fn(theta, key_k)
+        return theta, metrics
+
+    keys = jax.random.split(key_scan, cfg.n_rounds)
+    theta, (rewards, grad_sq, gain_mean) = jax.lax.scan(body, theta, keys)
+    return theta, History(rewards=rewards, grad_sq=grad_sq, gain_mean=gain_mean)
+
+
+def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None):
+    """jit-compiled entry point (env/policy/cfgs are closure constants)."""
+    fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0))
+    return fn(key)
+
+
+def avg_grad_sq(history: History) -> jax.Array:
+    """The paper's reported quantity: (1/K) sum_k ||grad J(theta^k)||^2."""
+    return jnp.mean(history.grad_sq)
+
+
+def monte_carlo(
+    env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None
+):
+    """n_runs independent repetitions (the paper uses 20): vmapped."""
+    keys = jax.random.split(key, n_runs)
+    fn = jax.jit(jax.vmap(lambda k: run(env, policy, cfg, k, ota=ota)[1]))
+    return fn(keys)

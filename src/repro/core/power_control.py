@@ -1,0 +1,91 @@
+"""Transmit-power policies: h_{i,k} = c_{i,k} * p_{i,k}.
+
+The paper folds the power coefficient p into the effective gain h and only
+needs (m_h, sigma_h^2).  These policies shape p as a function of the actual
+channel gain c, producing effective-gain distributions whose moments we
+estimate by Monte Carlo (no closed form for truncated inversion).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import Channel
+
+
+@dataclass(frozen=True)
+class PowerPolicy:
+    def apply(self, c: jax.Array) -> jax.Array:
+        """Map actual channel gains c to transmit power coefficients p."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class UnitPower(PowerPolicy):
+    """p == 1: the paper's default (h = c)."""
+
+    def apply(self, c: jax.Array) -> jax.Array:
+        return jnp.ones_like(c)
+
+
+@dataclass(frozen=True)
+class TruncatedInversion(PowerPolicy):
+    """p = min(target/c, p_max), with outage (p=0) below c_min.
+
+    Classic OTA power control: agents invert their channel so the server
+    sees ~equal gains, but deep fades are truncated to respect the power
+    budget (otherwise E[p^2] diverges for Rayleigh).
+    """
+
+    target: float = 1.0
+    p_max: float = 10.0
+    c_min: float = 0.05
+
+    def apply(self, c: jax.Array) -> jax.Array:
+        p = jnp.minimum(self.target / jnp.maximum(c, 1e-12), self.p_max)
+        return jnp.where(c >= self.c_min, p, 0.0)
+
+
+@dataclass(frozen=True)
+class ControlledChannel(Channel):
+    """Effective-gain channel h = c * policy(c) over a base channel."""
+
+    base: Channel = None  # type: ignore[assignment]
+    policy: PowerPolicy = UnitPower()
+    # Monte Carlo moment cache (filled by estimate_moments; dataclass frozen,
+    # so moments are passed explicitly).
+    _mean: float = float("nan")
+    _var: float = float("nan")
+
+    def sample(self, key: jax.Array, shape) -> jax.Array:
+        c = self.base.sample(key, shape)
+        return c * self.policy.apply(c)
+
+    @property
+    def mean(self) -> float:
+        return self._mean
+
+    @property
+    def var(self) -> float:
+        return self._var
+
+
+def estimate_moments(
+    base: Channel, policy: PowerPolicy, key: jax.Array, n: int = 200_000
+) -> Tuple[float, float]:
+    """Monte Carlo (m_h, sigma_h^2) of the effective gain h = c * p(c)."""
+    c = base.sample(key, (n,))
+    h = c * policy.apply(c)
+    m = float(jnp.mean(h))
+    v = float(jnp.var(h))
+    return m, v
+
+
+def make_controlled_channel(
+    base: Channel, policy: PowerPolicy, key: jax.Array, n: int = 200_000
+) -> ControlledChannel:
+    m, v = estimate_moments(base, policy, key, n)
+    return ControlledChannel(base=base, policy=policy, _mean=m, _var=v)

@@ -1,0 +1,2 @@
+"""Deterministic, shardable synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batch_specs  # noqa: F401

@@ -1,0 +1,130 @@
+"""Synthetic-but-structured token pipeline.
+
+Serves the role of a tokenised corpus loader: deterministic (step -> batch is
+a pure function of the seed, so every data-parallel host materialises only
+its shard), learnable (a mixture of k-order Markov chains with per-document
+latent "topics", so models show decreasing loss), and shardable (batch dim is
+sharded over ('pod','data')).
+
+The memory stub for the audio/vlm families is generated here too: frame or
+patch embeddings are produced from a fixed random projection of the token
+prefix, standing in for the (out-of-scope, per the assignment) modality
+frontends.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import needs_memory
+from repro.models.transformer import cross_len
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    n_topics: int = 8
+    order: int = 2         # Markov order of the synthetic language
+    seed: int = 0
+
+
+class SyntheticLM:
+    """step -> {tokens, labels} batches from a topic-mixture Markov chain."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        key = jax.random.key(cfg.seed)
+        k_trans, k_topic = jax.random.split(key)
+        # per-topic bigram transition logits over a hashed context bucket
+        self.n_buckets = min(cfg.vocab, 4096)
+        self.trans_logits = 2.0 * jax.random.normal(
+            k_trans, (cfg.n_topics, self.n_buckets, min(cfg.vocab, 1024)),
+            jnp.float32,
+        )
+        self.sub_vocab = self.trans_logits.shape[-1]
+
+    def _hash_ctx(self, tok: jax.Array) -> jax.Array:
+        h = tok.astype(jnp.uint32) * jnp.uint32(2654435761)
+        return (h % jnp.uint32(self.n_buckets)).astype(jnp.int32)
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.key(cfg.seed + 1), step)
+        k_topic, k_start, k_scan = jax.random.split(key, 3)
+        topics = jax.random.randint(
+            k_topic, (cfg.global_batch,), 0, cfg.n_topics
+        )
+        start = jax.random.randint(
+            k_start, (cfg.global_batch,), 0, self.sub_vocab
+        )
+
+        def gen_one(topic, tok0, k):
+            def body(tok, kt):
+                logits = self.trans_logits[topic, self._hash_ctx(tok)]
+                nxt = jax.random.categorical(kt, logits)
+                return nxt.astype(jnp.int32), nxt.astype(jnp.int32)
+
+            keys = jax.random.split(k, cfg.seq_len + 1)
+            _, toks = jax.lax.scan(body, tok0, keys)
+            return toks
+
+        keys = jax.random.split(k_scan, cfg.global_batch)
+        seq = jax.vmap(gen_one)(topics, start, keys)      # (B, S+1)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def memory_stub(
+    cfg: ModelConfig, tokens: jax.Array, seq_len: int, seed: int = 7
+) -> jax.Array:
+    """Precomputed frontend embeddings (B, mem_len, d_model) — the assigned
+    carve-out: a fixed random projection of token statistics stands in for
+    the ViT / speech-codec output."""
+    mem_len = cross_len(cfg, seq_len)
+    b = tokens.shape[0]
+    key = jax.random.key(seed)
+    proj = jax.random.normal(key, (mem_len, cfg.d_model), jnp.float32) * 0.02
+    phase = (tokens[:, :1].astype(jnp.float32) / max(cfg.vocab, 1))
+    return (proj[None] * (1.0 + phase[..., None])).astype(jnp.dtype(cfg.dtype))
+
+
+def make_batch(
+    model_cfg: ModelConfig, shape: InputShape, step: int, seed: int = 0
+) -> Dict[str, jax.Array]:
+    """One training batch for (arch, shape), memory stub included."""
+    dcfg = DataConfig(
+        vocab=model_cfg.vocab,
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        seed=seed,
+    )
+    ds = SyntheticLM(dcfg)
+    batch = ds.batch(step)
+    if needs_memory(model_cfg):
+        batch["memory"] = memory_stub(model_cfg, batch["tokens"], shape.seq_len)
+    return batch
+
+
+def make_batch_specs(
+    model_cfg: ModelConfig, shape: InputShape, mesh, batch_axes=("pod", "data")
+):
+    """NamedShardings for a batch dict: batch dim over the data axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    bspec = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def spec(ndim):
+        return NamedSharding(mesh, P(bspec, *([None] * (ndim - 1))))
+
+    out = {"tokens": spec(2), "labels": spec(2)}
+    if needs_memory(model_cfg):
+        out["memory"] = spec(3)
+    return out

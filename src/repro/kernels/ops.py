@@ -1,0 +1,74 @@
+"""jit'd dispatch layer over the Pallas kernels.
+
+``use_pallas=True`` targets the TPU kernels (interpret=False); the default
+``interpret=True`` executes the same kernel bodies in Python on CPU for
+correctness work, and ``use_pallas=False`` falls back to the jnp reference
+path (used inside dry-run lowering, where Pallas TPU lowering is unavailable
+on the CPU backend).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ota_channel as _ota
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """(B, H, S, Dh) attention; GQA via Hkv < H."""
+    if use_pallas:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    *,
+    chunk: int = 128,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """(B, S, H, P) Mamba2 SSD scan."""
+    if use_pallas:
+        return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return _ref.ssd_ref(x, dt, A, B, C, chunk)
+
+
+def ota_update(
+    v: jax.Array,
+    *,
+    sigma: float,
+    n_agents: int,
+    m_h: float = 1.0,
+    debias: bool = True,
+    seed: int = 0,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """The paper's fused server update (v + sigma*n) / (N * m_h)."""
+    if use_pallas:
+        return _ota.ota_channel_apply(
+            v, sigma=sigma, n_agents=n_agents, m_h=m_h, debias=debias,
+            seed=seed, interpret=interpret,
+        )
+    noise = jax.random.normal(jax.random.key(seed), v.shape, jnp.float32)
+    return _ref.ota_channel_ref(
+        v, noise, sigma=sigma, n_agents=n_agents, m_h=m_h, debias=debias
+    )

@@ -1,0 +1,524 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST be the first statements in this module —
+# jax locks the device count on first init (see module docstring below).
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+.compile()`` must succeed on the single-pod (16,16) mesh AND the 2-pod
+(2,16,16) mesh for every assigned architecture and input shape, using
+ShapeDtypeStruct stand-ins (zero allocation).
+
+The first two lines of this file MUST stay first: jax locks the device count
+on first init, and only the dry-run should see 512 host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch X --shape Y --tiny 4
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh, n_data_shards
+from repro.models import model as model_lib
+from repro.models.param import serve_rules, train_rules
+from repro.utils import shard_hints
+from repro.optim.optimizers import OptState
+from repro.train import server, trainer
+from repro.utils import hlo as hlo_lib
+from repro.utils.roofline import RooflineReport, model_flops_per_step
+from repro.utils.tree import tree_bytes
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    return model_lib.abstract_inputs(cfg, shape)
+
+
+def _default_microbatch(cfg, shape, n_agents: int) -> int:
+    """1 sequence per agent per microbatch for big models (keeps the scanned
+    remat carries bounded); single-shot for small ones."""
+    per_agent = max(shape.global_batch // n_agents, 1)
+    if cfg.d_model >= 3072 or shape.seq_len > 8192:
+        return per_agent
+    return 1
+
+
+def build_train_lowering(cfg, shape, mesh: Mesh, *, aggregator: str = "ota",
+                         microbatch: Optional[int] = None, fsdp: bool = True,
+                         remat: Optional[bool] = None):
+    model = model_lib.build(cfg if remat is None else cfg.with_(remat=remat))
+    n_agents = n_data_shards(mesh)
+    mb = microbatch or _default_microbatch(cfg, shape, n_agents)
+    tcfg = trainer.TrainConfig(
+        aggregator=aggregator, n_agents=n_agents, microbatch=mb,
+        total_steps=10_000,
+    )
+    step = trainer.make_train_step(model, tcfg)
+
+    rules = train_rules(fsdp=fsdp)
+    pspecs = model.specs(rules, mesh)
+    state_specs = trainer.TrainState(
+        params=pspecs,
+        opt_state=OptState(step=P(), mu=pspecs, nu=pspecs),
+        step=P(),
+    )
+    batch_sh = make_batch_specs(cfg, shape, mesh)
+    metric_specs = {k: P() for k in ("loss", "grad_norm", "gain_mean", "update_norm")}
+
+    state_abs = jax.eval_shape(
+        lambda k: trainer.init_state(model, tcfg, k), jax.eval_shape(lambda: jax.random.key(0))
+    )
+    batch_abs = input_specs(cfg, shape)
+    key_abs = jax.eval_shape(lambda: jax.random.key(0))
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, state_specs), batch_sh, NamedSharding(mesh, P())),
+        out_shardings=(_ns(mesh, state_specs), _ns(mesh, metric_specs)),
+        donate_argnums=(0,),
+    )
+    with shard_hints.hints(mesh, **shard_hints.attn_hints(cfg, mesh, "train")):
+        lowered = jitted.lower(state_abs, batch_abs, key_abs)
+    return lowered, {"microbatch": mb, "n_agents": n_agents}
+
+
+def build_prefill_lowering(cfg, shape, mesh: Mesh):
+    model = model_lib.build(cfg.with_(remat=False))
+    rules = serve_rules()
+    pspecs = model.specs(rules, mesh)
+    params_abs = model.abstract()
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = make_batch_specs(cfg, shape, mesh)
+    in_sh = [_ns(mesh, pspecs), batch_sh["tokens"]]
+    args = [params_abs, batch_abs["tokens"]]
+    if model_lib.needs_memory(cfg):
+        in_sh.append(batch_sh["memory"])
+        args.append(batch_abs["memory"])
+
+    def prefill_step(params, tokens, memory=None):
+        return model.prefill(params, tokens, memory)
+
+    jitted = jax.jit(prefill_step, in_shardings=tuple(in_sh))
+    with shard_hints.hints(mesh, **shard_hints.attn_hints(cfg, mesh, "prefill")):
+        lowered = jitted.lower(*args)
+    return lowered, {}
+
+
+def build_decode_lowering(cfg, shape, mesh: Mesh):
+    model = model_lib.build(cfg.with_(remat=False))
+    rules = serve_rules()
+    pspecs = model.specs(rules, mesh)
+    params_abs = model.abstract()
+    cache_abs = server.abstract_cache_for_shape(model, shape)
+    cache_sp = server.cache_specs(cfg, shape, mesh)
+    token_abs = input_specs(cfg, shape)["token"]
+    b_entry = server._batch_entry(mesh, shape.global_batch)
+    token_sh = NamedSharding(mesh, P(b_entry, None))
+
+    step = server.make_serve_step(model, shape)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, pspecs), _ns(mesh, cache_sp), token_sh),
+        out_shardings=(token_sh, None, _ns(mesh, cache_sp)),
+        donate_argnums=(1,),
+    )
+    return jitted.lower(params_abs, cache_abs, token_abs), {}
+
+
+# ===========================================================================
+# Cost calibration.
+#
+# XLA's cost_analysis counts a `while` body ONCE regardless of trip count, so
+# the scanned layer stacks (and the microbatch accumulation loop) are
+# undercounted.  We therefore lower shallow FULLY-UNROLLED variants with
+# identical per-layer shapes, measure (flops, hbm_bytes, collective_bytes)
+# vectors, solve the linear cost model
+#
+#     true = fixed + M * (micro_overhead + depth_terms(production depth))
+#
+# and extrapolate.  Depth knobs per family: plain layer count (dense/moe/
+# ssm), (groups, period) for hybrid/vlm, (enc_layers, dec_layers) for encdec.
+# ===========================================================================
+
+from repro.utils import unroll as uscan
+
+
+def _cost_vec(compiled) -> np.ndarray:
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_lib.parse_collective_bytes(compiled.as_text())
+    return np.array(
+        [
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll.total_bytes),
+        ]
+    )
+
+
+def _calib_shape(shape, global_batch: int):
+    return dataclasses.replace(shape, global_batch=global_batch)
+
+
+def _depth_points(cfg):
+    """Calibration points + solver for the depth-linear cost model.
+
+    Points avoid depth 1 — XLA makes pathologically different global
+    optimisation choices for single-layer programs (verified empirically),
+    so all measurements sit in the linear region (depths 2-4) and per-body
+    costs come from finite differences there.  Returns (points, solve) where
+    ``solve(U)`` yields {'D_a': depth cost at point a, 'D_prod': depth cost
+    at production depth}.
+    """
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm"):
+        pts = {"a": cfg.with_(n_layers=2), "b": cfg.with_(n_layers=3)}
+
+        def solve(U):
+            pl = U["b"] - U["a"]
+            return {"pl": pl, "D_a": 2 * pl, "D_prod": cfg.n_layers * pl}
+
+        return pts, solve
+    if fam == "hybrid":
+        # group = P mamba sublayers + 1 shared attn block; D = G*(go + P*pl)
+        pts = {
+            "a": cfg.with_(n_layers=2, shared_attn_every=2),   # G1 P2
+            "b": cfg.with_(n_layers=3, shared_attn_every=3),   # G1 P3
+            "c": cfg.with_(n_layers=4, shared_attn_every=2),   # G2 P2
+        }
+
+        def solve(U):
+            pl = U["b"] - U["a"]              # one extra mamba sublayer
+            go = U["c"] - U["a"] - 2 * pl     # one extra group (shared block)
+            g, t = divmod(cfg.n_layers, cfg.shared_attn_every)
+            d = g * (go + cfg.shared_attn_every * pl) + t * pl
+            return {"pl": pl, "go": go, "D_a": go + 2 * pl, "D_prod": d}
+
+        return pts, solve
+    if fam == "vlm":
+        # group = (P-1) plain layers + 1 cross layer; D = G*(go + (P-1)*pl)
+        pts = {
+            "a": cfg.with_(n_layers=2, cross_attn_every=2),    # G1 P2
+            "b": cfg.with_(n_layers=3, cross_attn_every=3),    # G1 P3
+            "c": cfg.with_(n_layers=4, cross_attn_every=2),    # G2 P2
+        }
+
+        def solve(U):
+            pl = U["b"] - U["a"]              # one extra plain sublayer
+            go = U["c"] - U["a"] - pl         # one extra group (cross layer)
+            g = cfg.n_layers // cfg.cross_attn_every
+            d = g * (go + (cfg.cross_attn_every - 1) * pl)
+            return {"pl": pl, "go": go, "D_a": go + pl, "D_prod": d}
+
+        return pts, solve
+    if fam == "encdec":
+        pts = {
+            "a": cfg.with_(encoder_layers=2, n_layers=2),
+            "b": cfg.with_(encoder_layers=3, n_layers=2),
+            "c": cfg.with_(encoder_layers=2, n_layers=3),
+        }
+
+        def solve(U):
+            pe = U["b"] - U["a"]
+            pd = U["c"] - U["a"]
+            return {
+                "pe": pe, "pd": pd, "D_a": 2 * pe + 2 * pd,
+                "D_prod": cfg.encoder_layers * pe + cfg.n_layers * pd,
+            }
+
+        return pts, solve
+    raise ValueError(fam)
+
+
+def _depth_points_decode(cfg):
+    """Decode runs no encoder, so encdec decode is depth-linear in n_layers."""
+    if cfg.family == "encdec":
+        pts = {"a": cfg.with_(n_layers=2), "b": cfg.with_(n_layers=3)}
+
+        def solve(U):
+            pl = U["b"] - U["a"]
+            return {"pl": pl, "D_a": 2 * pl, "D_prod": cfg.n_layers * pl}
+
+        return pts, solve
+    return _depth_points(cfg)
+
+
+def calibrated_costs(cfg, shape, mesh, *, aggregator: str = "ota",
+                     microbatch: int = 1, fsdp: bool = True,
+                     verbose: bool = False) -> Dict[str, float]:
+    """Trip-count-corrected (flops, hbm bytes, collective bytes), per chip."""
+    kind = shape.kind
+
+    def measure(point_cfg, point_shape, mb):
+        if kind == "train":
+            lowered, _ = build_train_lowering(
+                point_cfg, point_shape, mesh, aggregator=aggregator,
+                microbatch=mb, fsdp=fsdp,
+            )
+        elif kind == "prefill":
+            lowered, _ = build_prefill_lowering(point_cfg, point_shape, mesh)
+        else:
+            lowered, _ = build_decode_lowering(point_cfg, point_shape, mesh)
+        return _cost_vec(lowered.compile())
+
+    with uscan.unrolled():
+        if kind == "train":
+            # Measure with remat OFF (jax.checkpoint's recompute destabilises
+            # XLA cost analysis); the production program's remat recompute is
+            # one extra per-layer forward, approximated by scaling depth
+            # terms by 4/3 (fwd:bwd = 2:4, +fwd recompute => 8/6).
+            base_cfg = cfg.with_(remat=False)
+            pts, solve = _depth_points(base_cfg)
+            pb = shape.global_batch // microbatch   # sequences per microbatch
+            sh1 = _calib_shape(shape, pb)
+            U = {k: measure(c, sh1, 1) for k, c in pts.items()}
+            comp = solve(U)
+            base_a = U["a"] - comp["D_a"]            # fixed + micro_overhead
+            if microbatch > 1:
+                u_m2 = measure(pts["a"], _calib_shape(shape, 2 * pb), 2)
+                mo = (u_m2 - U["a"]) - comp["D_a"]   # one more micro body
+                fixed = base_a - mo
+            else:
+                mo, fixed = base_a, np.zeros(3)
+            remat_scale = 4.0 / 3.0 if cfg.remat else 1.0
+            true = fixed + microbatch * (mo + remat_scale * comp["D_prod"])
+        else:
+            pts, solve = (
+                _depth_points_decode(cfg) if kind == "decode" else _depth_points(cfg)
+            )
+            U = {k: measure(c, shape, 1) for k, c in pts.items()}
+            comp = solve(U)
+            true = (U["a"] - comp["D_a"]) + comp["D_prod"]
+
+    true = np.maximum(true, 0.0)
+    out = {
+        "flops": float(true[0]),
+        "hbm_bytes": float(true[1]),
+        "collective_bytes": float(true[2]),
+    }
+    if verbose:
+        print(f"  calibrated: {out}")
+    return out
+
+
+def analyze(lowered, compiled, cfg, shape, mesh_name: str, n_chips: int,
+            extra: Dict[str, Any],
+            calibrated: Optional[Dict[str, float]] = None) -> Dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_str = str(mem)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem, mem_str = None, f"unavailable: {e}"
+    coll = hlo_lib.parse_collective_bytes(compiled.as_text())
+    if calibrated is not None:
+        flops = calibrated["flops"]
+        hbm_bytes = calibrated["hbm_bytes"]
+        coll_bytes = calibrated["collective_bytes"]
+    else:
+        flops = float(cost.get("flops", 0.0))
+        hbm_bytes = float(cost.get("bytes accessed", 0.0))
+        coll_bytes = float(coll.total_bytes)
+
+    total, active = cfg.param_counts()
+    mf_total = model_flops_per_step(
+        n_params_active=active,
+        tokens=shape.tokens_per_step,
+        training=shape.kind == "train",
+    )
+    report = RooflineReport(
+        arch=cfg.arch_id,
+        shape=shape.name,
+        mesh=mesh_name,
+        n_chips=n_chips,
+        hlo_flops=flops,
+        hlo_bytes=hbm_bytes,
+        collective_bytes=coll_bytes,
+        model_flops=mf_total / n_chips,
+    ).finalize()
+
+    record = {
+        "arch": cfg.arch_id,
+        "shape": shape.name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+        "n_chips": n_chips,
+        "params_total": total,
+        "params_active": active,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives_rolled": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+        "calibrated": calibrated,
+        "memory_analysis": mem_str,
+        "roofline": report.row(),
+        **extra,
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            try:
+                record.setdefault("memory", {})[attr] = int(getattr(mem, attr))
+            except Exception:
+                pass
+    return record
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            tiny: int = 0, out_dir: str = "experiments/dryrun",
+            aggregator: str = "ota", microbatch: Optional[int] = None,
+            fsdp: bool = True, verbose: bool = True, calibrate: bool = True,
+            mesh_shape: str = "", tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if tiny:
+        mesh = jax.make_mesh((tiny, tiny), ("data", "model"))
+        mesh_name = f"tiny{tiny}x{tiny}"
+    elif mesh_shape:
+        # arch-adapted (data, model) factorisation of the same 256-chip pod
+        # (beyond-paper perf lever — see EXPERIMENTS.md §Perf)
+        d, m = (int(x) for x in mesh_shape.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        mesh_name = f"pod{d}x{m}"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_chips = mesh.size
+
+    t0 = time.time()
+    if shape.kind == "train":
+        mb = microbatch or _default_microbatch(cfg, shape, n_data_shards(mesh))
+        lowered, extra = build_train_lowering(
+            cfg, shape, mesh, aggregator=aggregator, microbatch=mb,
+            fsdp=fsdp,
+        )
+    elif shape.kind == "prefill":
+        mb = 1
+        lowered, extra = build_prefill_lowering(cfg, shape, mesh)
+    else:
+        mb = 1
+        lowered, extra = build_decode_lowering(cfg, shape, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    calib = None
+    t_calib = 0.0
+    if calibrate:
+        t0 = time.time()
+        calib = calibrated_costs(
+            cfg, shape, mesh, aggregator=aggregator, microbatch=mb, fsdp=fsdp,
+        )
+        t_calib = time.time() - t0
+
+    record = analyze(lowered, compiled, cfg, shape, mesh_name, n_chips, extra,
+                     calibrated=calib)
+    record["t_lower_s"] = round(t_lower, 2)
+    record["t_compile_s"] = round(t_compile, 2)
+    record["t_calibrate_s"] = round(t_calib, 2)
+    record["aggregator"] = aggregator if shape.kind == "train" else None
+
+    if verbose:
+        print(record["memory_analysis"])
+        print({k: v for k, v in record["cost_analysis"].items()})
+        r = record["roofline"]
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] lower={t_lower:.1f}s "
+            f"compile={t_compile:.1f}s compute={r['compute_s']*1e3:.3f}ms "
+            f"memory={r['memory_s']*1e3:.3f}ms coll={r['collective_s']*1e3:.3f}ms "
+            f"dominant={r['dominant']} useful={r['useful_flop_ratio']:.3f}"
+        )
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = f"{arch}_{shape_name}_{mesh_name}{suffix}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tiny", type=int, default=0,
+                    help="use a (tiny x tiny) mesh instead of production")
+    ap.add_argument("--mesh-shape", default="",
+                    help="arch-adapted (data x model) pod factorisation, "
+                         "e.g. 32x8 (same 256 chips)")
+    ap.add_argument("--aggregator", default="ota", choices=("ota", "exact"))
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the trip-count cost calibration (multi-pod "
+                         "compile-proof runs don't need rooflines)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(
+                arch, shape, multi_pod=args.multi_pod, tiny=args.tiny,
+                out_dir=args.out, aggregator=args.aggregator,
+                microbatch=args.microbatch, fsdp=not args.no_fsdp,
+                calibrate=not (args.no_calibrate or args.multi_pod),
+                mesh_shape=args.mesh_shape, tag=args.tag,
+            )
+        except Exception:
+            print(f"FAILED: {arch} x {shape}")
+            traceback.print_exc()
+            failures.append((arch, shape))
+    if failures:
+        print("failures:", failures)
+        return 1
+    print(f"all {len(combos)} combination(s) lowered + compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

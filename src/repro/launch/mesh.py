@@ -1,0 +1,27 @@
+"""Production mesh construction (functions only — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e pod mesh: (16,16) = 256 chips; multi-pod: (2,16,16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tiny_mesh(data: int = 2, model: int = 2):
+    """Small host-device mesh for CI tests (requires the XLA host-device
+    flag to be set before jax initialises)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_data_shards(mesh) -> int:
+    """Number of OTA 'agents' = data-parallel replica groups."""
+    n = 1
+    for axis in ("pod", "data"):
+        if axis in mesh.shape:
+            n *= mesh.shape[axis]
+    return n

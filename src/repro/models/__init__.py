@@ -1,0 +1,12 @@
+"""Model substrate: composable transformer/SSM families as pure functions.
+
+Every architecture is described by a *parameter plan* (a pytree of
+``ParamDecl``) from which three consistent artifacts derive:
+    - initialised parameters          (``param.init_params``)
+    - ``jax.ShapeDtypeStruct`` stand-ins for dry-runs (no allocation)
+    - ``PartitionSpec`` trees for pjit (``param.partition_specs``)
+
+``model.build(config)`` returns a ``Model`` bundle of pure functions
+(init/loss/prefill/decode) for any of the six assigned families.
+"""
+from repro.models import model  # noqa: F401

@@ -1,0 +1,319 @@
+"""Grouped-query attention: full, sliding-window, cross, and cached decode.
+
+Two numerics paths:
+
+* ``attend`` — materialised-scores reference (differentiable; used for
+  training at 4k and by smoke tests; also the oracle for the Pallas flash
+  kernel).
+* ``attend_blockwise`` — jnp online-softmax flash forward (lax.scan over KV
+  blocks, O(S) memory) used for long prefill lowering where no gradient is
+  required.  The Pallas kernel in ``kernels/flash_attention.py`` is the TPU
+  version of the same schedule.
+
+All shapes: q (B, Sq, H, Dh); k/v (B, Sk, Hkv, Dh); GQA via head grouping.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm_plan, rmsnorm
+from repro.models.param import decl
+from repro.utils import shard_hints as hints
+from repro.utils import unroll as uscan
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+def attn_plan(cfg: ModelConfig) -> Dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "norm": rmsnorm_plan(d),
+        "wq": decl((d, h, dh), ("d_model", "heads", None)),
+        "wk": decl((d, hkv, dh), ("d_model", "kv_heads", None)),
+        "wv": decl((d, hkv, dh), ("d_model", "kv_heads", None)),
+        "wo": decl((h, dh, d), ("heads", None, "d_model"), fan_in_axes=(0, 1)),
+    }
+
+
+def _mask_bias(
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    k_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """(Sq, Sk) additive bias: 0 where visible, NEG_INF elsewhere."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jax.Array] = None,
+    expand_kv: bool = False,
+) -> jax.Array:
+    """Reference GQA attention with materialised (Sq, Sk) scores.
+
+    ``expand_kv=True`` repeats KV heads up to the Q head count before the
+    score matmul (the Megatron-TP convention): every einsum then carries a
+    full 'heads' axis, so head sharding — or the context-parallel q_seq
+    fallback (utils.shard_hints) — propagates cleanly.  Decode keeps the
+    grouped form (expanding a 32k-slot cache per step would triple its
+    footprint); its sharding comes from the cache specs instead.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window, k_valid=k_valid)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    if expand_kv:
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = hints.constrain(q, "batch", "q_seq", "heads", None)
+        k = hints.constrain(k, "batch", None, "heads", None)
+        v = hints.constrain(v, "batch", None, "heads", None)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        scores = scores + bias
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return hints.constrain(out, "batch", "q_seq", "heads", None)
+    qr = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k).astype(jnp.float32) * scale
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def attend_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Flash-style forward: scan KV blocks with online softmax (O(Sk) mem).
+
+    Numerically matches ``attend`` (same f32 softmax); intended for prefill
+    lowering where no backward pass is taken.  KV heads are expanded to the
+    Q head count (see ``attend``) so head/context-parallel sharding holds.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    block_k = min(block_k, sk)
+    if sk % block_k != 0:
+        # short/odd sequences (tests, tails): the materialised path is fine
+        return attend(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                      window=window, expand_kv=True)
+    nblk = sk // block_k
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = hints.constrain(q, "batch", "q_seq", "heads", None)
+    qr = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+
+    kb = k.reshape(b, nblk, block_k, h, dh)
+    vb = v.reshape(b, nblk, block_k, h, dh)
+    kpb = k_pos.reshape(nblk, block_k)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_i, v_i, kp_i = blk
+        k_i = hints.constrain(k_i, "batch", None, "heads", None)
+        v_i = hints.constrain(v_i, "batch", None, "heads", None)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qr, k_i.astype(jnp.float32))
+        s = s + _mask_bias(q_pos, kp_i, causal=causal, window=window)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = uscan.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kpb),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 1, 2)  # (b, sq, h, dh)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Module-level apply: projections + rope + attend (+cache handling)
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Fixed-capacity cache; ring-buffered when capacity < full context."""
+
+    k: jax.Array          # (B, cap, Hkv, Dh) — rope already applied
+    v: jax.Array          # (B, cap, Hkv, Dh)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, capacity: int, dtype
+) -> KVCache:
+    shape = (batch, capacity, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _project_qkv(params: PyTree, x: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    return q, k, v
+
+
+def _out_proj(params: PyTree, o: jax.Array) -> jax.Array:
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype))
+    return hints.constrain(out, "batch", "q_seq", None)
+
+
+def self_attention(
+    params: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    blockwise: bool = False,
+    positions: Optional[jax.Array] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence self attention (train / prefill / encoder)."""
+    b, s, _ = x.shape
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(params, h)
+    pos = jnp.arange(s) if positions is None else positions
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if blockwise:
+        o = attend_blockwise(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                             window=window)
+    else:
+        o = attend(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                   window=window, expand_kv=True)
+    out = _out_proj(params, o)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(
+    params: PyTree,
+    x: jax.Array,
+    memory_kv: Tuple[jax.Array, jax.Array],
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Cross attention over precomputed memory K/V (no mask, no rope)."""
+    b, sq, _ = x.shape
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"].astype(x.dtype))
+    k, v = memory_kv
+    sk = k.shape[1]
+    o = attend(
+        q, k, v,
+        q_pos=jnp.zeros((sq,), jnp.int32),
+        k_pos=jnp.zeros((sk,), jnp.int32),
+        causal=False,
+        expand_kv=sq > 1,   # grouped path for 1-token decode
+    )
+    return _out_proj(params, o)
+
+
+def project_memory(params: PyTree, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder/frontend output."""
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(dt))
+    return k, v
+
+
+def decode_self_attention(
+    params: PyTree,
+    x: jax.Array,          # (B, 1, D) — the new token
+    cache: KVCache,
+    pos: jax.Array,        # scalar int32: absolute position of the new token
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step against a (possibly ring-buffered) KV cache.
+
+    Capacity == full context  -> plain causal cache (slot = pos).
+    Capacity W < full context -> ring buffer (slot = pos mod W), giving
+    sliding-window attention with O(W) memory — the sub-quadratic serving
+    path used by long_500k.
+    """
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(params, h)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k = apply_rope(k, pos[None], cfg.rope_theta)
+
+    cap = cache.capacity
+    slot = jnp.mod(pos, cap)
+    k_all = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    # Absolute position stored in each slot s: the largest p <= pos with
+    # p mod cap == s  ->  p = pos - ((pos - s) mod cap).
+    slots = jnp.arange(cap)
+    k_pos = pos - jnp.mod(pos - slots, cap)
+    k_valid = k_pos >= 0
+    eff_window = window if window is not None and window < cap else None
+    o = attend(
+        q, k_all, v_all,
+        q_pos=pos[None],
+        k_pos=k_pos,
+        causal=True,
+        window=eff_window,
+        k_valid=k_valid,
+    )
+    return _out_proj(params, o), KVCache(k=k_all, v=v_all)
+
+
+def decode_cross_attention(
+    params: PyTree,
+    x: jax.Array,
+    memory_kv: Tuple[jax.Array, jax.Array],
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Cross attention during decode — the memory K/V are static."""
+    return cross_attention(params, x, memory_kv, cfg)

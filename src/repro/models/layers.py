@@ -1,0 +1,154 @@
+"""Shared neural building blocks (plan builders + pure apply functions)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import decl
+from repro.utils import shard_hints as hints
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def rmsnorm_plan(d: int) -> Dict:
+    return {"scale": decl((d,), ("d_model",), init="ones", dtype="float32")}
+
+
+def rmsnorm(params: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_plan(cfg: ModelConfig) -> Dict:
+    p = {"tok": decl((cfg.vocab, cfg.d_model), ("vocab", "d_model"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = decl((cfg.d_model, cfg.vocab), ("d_model", "vocab"))
+    return p
+
+
+def embed(params: PyTree, tokens: jax.Array, dtype) -> jax.Array:
+    x = params["tok"].astype(dtype)[tokens]
+    return hints.constrain(x, "batch", "q_seq", None)
+
+
+def unembed(params: PyTree, x: jax.Array, tie: bool) -> jax.Array:
+    w = params["tok"].T if tie else params["head"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def mlp_plan(d_model: int, d_ff: int) -> Dict:
+    return {
+        "norm": rmsnorm_plan(d_model),
+        "gate": decl((d_model, d_ff), ("d_model", "d_ff")),
+        "up": decl((d_model, d_ff), ("d_model", "d_ff")),
+        "down": decl((d_ff, d_model), ("d_ff", "d_model")),
+    }
+
+
+def mlp(params: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    h = rmsnorm(params["norm"], x, eps)
+    g = jnp.einsum("...d,df->...f", h, params["gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", h, params["up"].astype(x.dtype))
+    g = hints.constrain(g, "batch", "q_seq", "d_ff")
+    u = hints.constrain(u, "batch", "q_seq", "d_ff")
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out = jnp.einsum("...f,fd->...d", act, params["down"].astype(x.dtype))
+    return hints.constrain(out, "batch", "q_seq", None)
+
+
+# --------------------------------------------------------------------------
+# Cross-entropy LM loss
+# --------------------------------------------------------------------------
+
+def lm_loss(
+    logits: jax.Array,
+    labels: jax.Array,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean next-token cross-entropy; ``weights`` optionally reweights each
+    sequence (the OTA channel-weighted-loss hook: weight = h_{agent(seq)})."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold                                     # (batch, seq)
+    per_seq = jnp.mean(nll, axis=-1)                      # (batch,)
+    if weights is not None:
+        per_seq = per_seq * weights
+    return jnp.mean(per_seq)
+
+
+def chunked_lm_loss(
+    embed_params: PyTree,
+    hidden: jax.Array,              # (B, S, D) — post-final-norm
+    labels: jax.Array,              # (B, S)
+    tie: bool,
+    weights: Optional[jax.Array] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """CE without materialising the (B, S, vocab) f32 logits: scan over seq
+    chunks with remat, so both fwd and bwd hold one (B, chunk, vocab) block
+    (1.7 GB -> 0.2 GB/device on deepseek-67b train — EXPERIMENTS.md §Perf).
+    """
+    from repro.utils import unroll as uscan
+
+    b, s, d = hidden.shape
+    if s % chunk != 0:
+        return lm_loss(
+            unembed(embed_params, hidden, tie), labels, weights
+        )
+    nc = s // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, blk):
+        h, lab = blk
+        logits = unembed(embed_params, h, tie).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold, axis=-1), None
+
+    body = jax.checkpoint(body)
+    nll_sum, _ = uscan.scan(body, jnp.zeros((b,), jnp.float32), (hc, lc))
+    per_seq = nll_sum / s
+    if weights is not None:
+        per_seq = per_seq * weights
+    return jnp.mean(per_seq)

@@ -1,0 +1,124 @@
+"""Public model API: ``build(config)`` -> a bundle of pure functions.
+
+Also provides ``abstract_inputs`` — the ShapeDtypeStruct stand-ins for every
+(config x input-shape) combination, used by smoke tests, the data pipeline
+contract, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+from repro.models.param import (
+    abstract_params, init_params, partition_specs, Rules,
+)
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    plan: Any
+
+    def init(self, key: jax.Array) -> PyTree:
+        return init_params(key, self.plan, jnp.dtype(self.cfg.dtype))
+
+    def abstract(self) -> PyTree:
+        return abstract_params(self.plan, jnp.dtype(self.cfg.dtype))
+
+    def specs(self, rules: Rules, mesh) -> PyTree:
+        return partition_specs(self.plan, rules, mesh)
+
+    # pure functions ------------------------------------------------------
+    def loss(self, params, batch, weights=None):
+        return transformer.loss(params, self.cfg, batch, weights)
+
+    def forward(self, params, tokens, memory=None, *, blockwise=False):
+        return transformer.forward(
+            params, self.cfg, tokens, memory, blockwise=blockwise
+        )
+
+    def prefill(self, params, tokens, memory=None):
+        return transformer.prefill(params, self.cfg, tokens, memory)
+
+    def decode(self, params, cache, token, *, window=None):
+        return transformer.decode(
+            params, self.cfg, cache, token, window=window
+        )
+
+    def init_cache(self, batch, capacity, mem_len=0, dtype=None):
+        return transformer.init_cache(
+            self.cfg, batch, capacity, mem_len, dtype
+        )
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, plan=transformer.plan(cfg))
+
+
+# --------------------------------------------------------------------------
+# Input contracts
+# --------------------------------------------------------------------------
+
+def serve_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """KV-cache slots for decode: full context, or the SWA ring if the arch
+    serves long contexts through a sliding window (DESIGN.md §4)."""
+    win = cfg.window or cfg.serve_window
+    if win is not None and win < seq_len:
+        return win
+    return seq_len
+
+
+def needs_memory(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "encdec")
+
+
+def abstract_inputs(
+    cfg: ModelConfig, shape: InputShape, *, dtype: Optional[str] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one step of the given kind.
+
+    train:   {tokens, labels[, memory]}          (B, S) int32
+    prefill: {tokens[, memory]}
+    decode:  {token}  (B, 1) — cache/params come from their own specs
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(dtype or cfg.dtype)
+    i32 = jnp.int32
+    mem_len = transformer.cross_len(cfg, s)
+
+    def mem():
+        return jax.ShapeDtypeStruct((b, mem_len, cfg.d_model), dt)
+
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if needs_memory(cfg):
+            out["memory"] = mem()
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if needs_memory(cfg):
+            out["memory"] = mem()
+        return out
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape) -> PyTree:
+    """ShapeDtypeStruct tree matching init_cache for the decode shapes."""
+    cap = serve_capacity(cfg, shape.seq_len)
+    mem_len = transformer.cross_len(cfg, shape.seq_len)
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, cap, mem_len)
+    )
+    return cache

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dropless-ish dispatch.
+
+Dispatch uses sort-free gather/scatter (one-hot *cumsum* for intra-expert
+ranks, then scatter into an (E, C, d) buffer), NOT one-hot matmuls — so the
+compiled FLOPs scale with top_k like a real TPU MoE, and ``cost_analysis``
+reflects the paper-relevant active-parameter compute.  Expert weights carry an
+'experts' logical axis so expert parallelism is a sharding rule
+('experts' -> 'model'), with XLA inserting the all-to-all.
+
+OTA note (DESIGN.md §Arch-applicability): per-agent expert-gradient sparsity
+makes MoE the worst-case family for OTA SNR — the dense channel noise hits
+every expert's parameters while only top_k experts per token receive signal.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_plan
+from repro.models.param import decl
+from repro.utils import shard_hints as hints
+from repro.utils.tree import ceil_div
+
+PyTree = Any
+
+
+def moe_plan(cfg: ModelConfig) -> Dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    return {
+        "norm": rmsnorm_plan(d),
+        "router": decl((d, e), ("d_model", None), scale=0.02),
+        "gate": decl((e, d, ff), ("experts", "d_model", "d_ff"), fan_in_axes=(1,)),
+        "up": decl((e, d, ff), ("experts", "d_model", "d_ff"), fan_in_axes=(1,)),
+        "down": decl((e, ff, d), ("experts", "d_ff", "d_model"), fan_in_axes=(1,)),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = ceil_div(n_tokens * m.top_k, m.num_experts)
+    c = int(c * m.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU-friendly layouts
+
+
+def route(
+    params: PyTree, x_flat: jax.Array, cfg: ModelConfig, key=None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing. Returns (expert_idx (T,k), gates (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = jnp.einsum(
+        "td,de->te", x_flat.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    if key is not None and m.router_jitter > 0.0:
+        logits = logits + m.router_jitter * jax.random.normal(key, logits.shape)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(gates_full, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    t = x_flat.shape[0]
+    me = jnp.mean(gates_full, axis=0)                          # (E,)
+    ce = jnp.zeros((m.num_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (t * m.top_k)
+    )
+    aux = m.num_experts * jnp.sum(me * ce) * m.load_balance_coef
+    return idx, gates.astype(x_flat.dtype), aux
+
+
+def moe_ffn(
+    params: PyTree, x: jax.Array, cfg: ModelConfig, key=None
+) -> Tuple[jax.Array, jax.Array]:
+    """MoE feed-forward over (B, S, D). Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    m = cfg.moe
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    x_flat = h.reshape(b * s, d)
+    t = b * s
+    cap = _capacity(t, cfg)
+
+    idx, gates, aux = route(params, x_flat, cfg, key)
+
+    # intra-expert rank of each (token, slot) assignment, via a stable sort
+    # by expert id + per-expert offsets (bincount).  NB: the one-hot-cumsum
+    # formulation is O(T*k*E) *and* lowers through quadratic-cost
+    # reduce-window prefix sums on some backends — see EXPERIMENTS.md §Perf
+    # (granite-moe prefill hillclimb) for the measured 33x flops difference.
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    n_assign = t * m.top_k
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=m.num_experts)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    rank_sorted = jnp.arange(n_assign, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros((n_assign,), jnp.int32).at[sort_idx].set(rank_sorted)
+    keep = rank < cap
+    dest = jnp.where(keep, flat_e * cap + rank, m.num_experts * cap)
+
+    # scatter tokens into the (E*C, d) buffer (dropped tokens fall off the end)
+    src = jnp.repeat(x_flat, m.top_k, axis=0)                  # (T*k, d)
+    buf = jnp.zeros((m.num_experts * cap + 1, d), x.dtype).at[dest].set(src)
+    buf = buf[:-1].reshape(m.num_experts, cap, d)
+
+    # per-expert SwiGLU — batched matmul over the experts axis.  The
+    # capacity dim shards over the data axes (each shard owns a slice of
+    # every expert's token slots — the all-to-all dispatch pattern), and the
+    # expert dim over 'model' where divisible; otherwise d_ff carries the
+    # model axis.  Without the capacity constraint GSPMD replicated the
+    # whole global-capacity buffer on every data shard (16x expert compute,
+    # measured on mixtral prefill — EXPERIMENTS.md §Perf).
+    dt = x.dtype
+    serve = hints.has("moe_cap")   # serve-only: see utils/shard_hints notes
+    if serve:
+        buf = hints.constrain(buf, "experts", "moe_cap", None)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["up"].astype(dt))
+    if serve:
+        g = hints.constrain(g, "experts", "moe_cap", "d_ff")
+        u = hints.constrain(u, "experts", "moe_cap", "d_ff")
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    y = jnp.einsum("ecf,efd->ecd", act, params["down"].astype(dt))
+    if serve:
+        y = hints.constrain(y, "experts", "moe_cap", None)
+
+    # gather back and mix with gates (dropped assignments contribute zero)
+    y_flat = y.reshape(m.num_experts * cap, d)
+    safe = jnp.where(keep, dest, 0)
+    picked = y_flat[safe] * keep[:, None].astype(dt)           # (T*k, d)
+    picked = picked.reshape(t, m.top_k, d)
+    out = jnp.sum(picked * gates[..., None], axis=1)
+    out = hints.constrain(out.reshape(b, s, d), "batch", "q_seq", None)
+    return out, aux

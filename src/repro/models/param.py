@@ -1,0 +1,180 @@
+"""Parameter plans: one declaration tree -> params, abstract shapes, specs.
+
+A ``ParamDecl`` names every dimension of every weight with a *logical axis*
+('d_model', 'd_ff', 'heads', 'experts', ...).  Sharding is then a pure
+function of (plan, rules, mesh): each logical axis maps to zero or more mesh
+axes, and any mapping whose product doesn't divide the dimension is dropped
+(replicated) instead of failing — so the same plan serves the 1-device smoke
+tests, the (16,16) pod and the (2,16,16) multi-pod mesh.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    """Declaration of one weight tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis per dim (None = never shard)
+    init: str = "normal"                 # normal | zeros | ones | uniform | custom
+    scale: Optional[float] = None        # stddev; None -> 1/sqrt(fan_in)
+    fan_in_axes: Tuple[int, ...] = (0,)  # dims counted as fan-in
+    dtype: Optional[str] = None          # override model dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def stddev(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = 1
+        for a in self.fan_in_axes:
+            fan_in *= self.shape[a]
+        return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def decl(shape, axes, **kw) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), **kw)
+
+
+def stack_plan(plan: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Prepend a stacked-layer dimension to every decl (for lax.scan bodies)."""
+
+    def _stack(d: ParamDecl) -> ParamDecl:
+        return ParamDecl(
+            shape=(n,) + d.shape,
+            axes=(axis_name,) + d.axes,
+            init=d.init,
+            scale=d.scale,
+            fan_in_axes=tuple(a + 1 for a in d.fan_in_axes),
+            dtype=d.dtype,
+        )
+
+    return jax.tree.map(_stack, plan, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def init_params(key: jax.Array, plan: PyTree, dtype=jnp.float32) -> PyTree:
+    """Materialise a plan into initialised parameters."""
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+
+    def _one(k, d: ParamDecl):
+        dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "uniform":
+            s = d.stddev()
+            return jax.random.uniform(k, d.shape, jnp.float32, -s, s).astype(dt)
+        if d.init == "dt_bias":
+            # mamba2 dt bias: softplus^-1 of dt ~ U[dt_min, dt_max]
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(dt)
+        if d.init == "a_log":
+            # mamba2 A_log: A ~ U[1, 16], stored as log
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        return (jax.random.normal(k, d.shape, jnp.float32) * d.stddev()).astype(dt)
+
+    return jax.tree.unflatten(treedef, [_one(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(plan: PyTree, dtype=jnp.float32) -> PyTree:
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+
+    def _one(d: ParamDecl):
+        dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(dtype)
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return jax.tree.map(_one, plan, is_leaf=_is_decl)
+
+
+# --------------------------------------------------------------------------
+# Sharding rules
+# --------------------------------------------------------------------------
+
+Rules = Mapping[str, Tuple[str, ...]]  # logical axis -> mesh axes
+
+
+def _mesh_axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def spec_for(
+    d: ParamDecl, rules: Rules, mesh: Mesh
+) -> P:
+    """PartitionSpec for one decl under the rules, replicating any dim whose
+    size isn't divisible by its assigned mesh-axis product, and never
+    assigning the same mesh axis twice in one spec."""
+    used: set = set()
+    parts = []
+    for dim, axis in zip(d.shape, d.axes):
+        entry = None
+        if axis is not None and axis in rules:
+            mesh_axes = tuple(a for a in rules[axis] if a in mesh.shape and a not in used)
+            if mesh_axes and dim % _mesh_axis_size(mesh, mesh_axes) == 0:
+                entry = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                used.update(mesh_axes)
+        parts.append(entry)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def partition_specs(plan: PyTree, rules: Rules, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda d: spec_for(d, rules, mesh), plan, is_leaf=_is_decl)
+
+
+def named_shardings(plan: PyTree, rules: Rules, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(d, rules, mesh)),
+        plan,
+        is_leaf=_is_decl,
+    )
+
+
+# Canonical rule-sets.  'data' axes shard FSDP-style (ZeRO-3) in training;
+# serving keeps weights replicated across 'data' so decode needs no gathers.
+def train_rules(fsdp: bool = True) -> Dict[str, Tuple[str, ...]]:
+    r: Dict[str, Tuple[str, ...]] = {
+        "d_ff": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "d_inner": ("model",),
+        "ssm_heads": ("model",),
+    }
+    if fsdp:
+        r["d_model"] = ("data",)
+    return r
+
+
+def serve_rules() -> Dict[str, Tuple[str, ...]]:
+    return {
+        "d_ff": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "d_inner": ("model",),
+        "ssm_heads": ("model",),
+    }

@@ -1,0 +1,273 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+The SSD recurrence  s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t,  y_t = C_t s_t
+is evaluated chunk-wise (chunk Q, MXU-aligned): a quadratic intra-chunk term
+(the "duality" — an attention-like (Q,Q) matmul with a decay mask) plus an
+inter-chunk state carry (lax.scan over chunks).  ``ssd_ref`` is the pure-jnp
+oracle; ``kernels/ssd_scan.py`` is the Pallas TPU version of the same
+schedule.  ``ssm_step`` is the O(1) recurrent decode form — equality between
+``ssd_ref`` and repeated ``ssm_step`` is property-tested.
+
+Projections are split per segment (z/x/B/C/dt) rather than fused, so the
+'d_inner'/'ssm_heads' logical axes shard cleanly (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import decl
+from repro.utils import shard_hints as hints
+from repro.utils import unroll as uscan
+
+PyTree = Any
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return d_inner, n_heads, s.n_groups, s.state
+
+
+def ssm_plan(cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, h, g, n = dims(cfg)
+    return {
+        "norm": {"scale": decl((d,), ("d_model",), init="ones", dtype="float32")},
+        "w_z": decl((d, d_in), ("d_model", "d_inner")),
+        "w_x": decl((d, d_in), ("d_model", "d_inner")),
+        "w_B": decl((d, g * n), ("d_model", None)),
+        "w_C": decl((d, g * n), ("d_model", None)),
+        "w_dt": decl((d, h), ("d_model", "ssm_heads")),
+        "conv_x": decl((s.conv_width, d_in), (None, "d_inner"), scale=0.5),
+        "conv_B": decl((s.conv_width, g * n), (None, None), scale=0.5),
+        "conv_C": decl((s.conv_width, g * n), (None, None), scale=0.5),
+        "dt_bias": decl((h,), ("ssm_heads",), init="dt_bias", dtype="float32"),
+        "A_log": decl((h,), ("ssm_heads",), init="a_log", dtype="float32"),
+        "D": decl((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "gate_norm": {
+            "scale": decl((d_in,), ("d_inner",), init="ones", dtype="float32")
+        },
+        "w_out": decl((d_in, d), ("d_inner", "d_model")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv along time. x: (B,S,C); w: (W,C).
+
+    Returns (y, new_state) where state keeps the last W-1 inputs for decode.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state
+
+
+def ssd_ref(
+    x: jax.Array,     # (B, S, H, P) — dt-weighted inputs applied inside
+    dt: jax.Array,    # (B, S, H) — post-softplus
+    A: jax.Array,     # (H,) — negative
+    B: jax.Array,     # (B, S, G, N)
+    C: jax.Array,     # (B, S, G, N)
+    chunk: int,
+) -> jax.Array:
+    """Chunked SSD scan, f32 math. Returns y: (B, S, H, P).
+
+    Sequences shorter than / not divisible by ``chunk`` are zero-padded on
+    the right: dt=0 padding steps have decay exp(0)=1 and zero input, so
+    they are exact no-ops on both the outputs and the carried state.
+    """
+    b, s_orig, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    chunk = min(chunk, s_orig) if s_orig < chunk else chunk
+    pad = -s_orig % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zp(x), zp(dt), zp(B), zp(C)
+    s = s_orig + pad
+    nc = s // chunk
+
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    B = B.astype(f32)
+    C = C.astype(f32)
+
+    da = dt * A[None, None, :]                                  # (b,s,h) <= 0
+    dax = x * dt[..., None]                                     # dt-weighted input
+
+    xc = dax.reshape(b, nc, chunk, g, hg, p)
+    dac = da.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    cum = jnp.cumsum(dac, axis=2)                               # (b,nc,Q,h)
+    cum_g = cum.reshape(b, nc, chunk, g, hg)
+
+    # ---- intra-chunk (quadratic, attention-like) -------------------------
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)           # (b,nc,g,Q,Q)
+    # seg[q, k] = cum[q] - cum[k] = sum_{tau in (k, q]} da_tau   (<= 0)
+    seg = (
+        cum_g[:, :, :, None, :, :] - cum_g[:, :, None, :, :, :]
+    )                                                            # (b,nc,Q,K,g,hg)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None, None], jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("bcgqk,bcqkgh,bckghp->bcqghp", scores, decay, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    last = cum[:, :, -1:, :]                                    # (b,nc,1,h)
+    decay_to_end = jnp.exp(last - cum).reshape(b, nc, chunk, g, hg)
+    states = jnp.einsum("bcqgn,bcqgh,bcqghp->bcghpn", Bc, decay_to_end, xc)
+
+    # ---- inter-chunk carry -------------------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :]).reshape(b, nc, g, hg)
+
+    def body(s_prev, inp):
+        st, dec = inp                                           # (b,g,hg,p,n), (b,g,hg)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, g, hg, p, n), f32)
+    _, s_prevs = uscan.scan(
+        body,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                       # (b,nc,g,hg,p,n)
+
+    y_inter = jnp.einsum(
+        "bcqgn,bcghpn,bcqgh->bcqghp",
+        Cc,
+        s_prevs,
+        jnp.exp(cum_g),
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig]
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state for one SSM layer."""
+
+    ssm: jax.Array      # (B, G, H/G, P, N) f32
+    conv_x: jax.Array   # (B, W-1, d_inner)
+    conv_B: jax.Array   # (B, W-1, G*N)
+    conv_C: jax.Array   # (B, W-1, G*N)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    d_in, h, g, n = dims(cfg)
+    w = s.conv_width
+    return SSMState(
+        ssm=jnp.zeros((batch, g, h // g, s.headdim, n), jnp.float32),
+        conv_x=jnp.zeros((batch, w - 1, d_in), dtype),
+        conv_B=jnp.zeros((batch, w - 1, g * n), dtype),
+        conv_C=jnp.zeros((batch, w - 1, g * n), dtype),
+    )
+
+
+def _project(params: PyTree, h: jax.Array, cfg: ModelConfig):
+    dt_ = h.dtype
+    z = jnp.einsum("bsd,de->bse", h, params["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", h, params["w_x"].astype(dt_))
+    Bp = jnp.einsum("bsd,de->bse", h, params["w_B"].astype(dt_))
+    Cp = jnp.einsum("bsd,de->bse", h, params["w_C"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", h, params["w_dt"].astype(dt_))
+    return z, xs, Bp, Cp, dt
+
+
+def ssm_mixer(
+    params: PyTree, x: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Full-sequence Mamba2 block body (pre-norm residual branch)."""
+    b, s, d = x.shape
+    scfg = cfg.ssm
+    d_in, h_heads, g, n = dims(cfg)
+    hid = rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xs, Bp, Cp, dt = _project(params, hid, cfg)
+    z = hints.constrain(z, "batch", None, "d_inner")
+    xs = hints.constrain(xs, "batch", None, "d_inner")
+
+    xs, _ = _causal_conv(xs, params["conv_x"].astype(x.dtype))
+    Bp, _ = _causal_conv(Bp, params["conv_B"].astype(x.dtype))
+    Cp, _ = _causal_conv(Cp, params["conv_C"].astype(x.dtype))
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    Bp = jax.nn.silu(Bp.astype(jnp.float32)).astype(x.dtype)
+    Cp = jax.nn.silu(Cp.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xs.reshape(b, s, h_heads, scfg.headdim)
+    xh = hints.constrain(xh, "batch", None, "ssm_heads", None)
+    Bh = Bp.reshape(b, s, g, n)
+    Ch = Cp.reshape(b, s, g, n)
+
+    y = ssd_ref(xh, dt, A, Bh, Ch, scfg.chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"scale": params["gate_norm"]["scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return hints.constrain(out, "batch", None, None)
+
+
+def ssm_step(
+    params: PyTree, x: jax.Array, state: SSMState, cfg: ModelConfig
+) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent step: x (B, 1, D) -> (y (B, 1, D), state')."""
+    b = x.shape[0]
+    scfg = cfg.ssm
+    d_in, h_heads, g, n = dims(cfg)
+    hid = rmsnorm(params["norm"], x, cfg.norm_eps)
+    z, xs, Bp, Cp, dt = _project(params, hid, cfg)
+
+    xs, cx = _causal_conv(xs, params["conv_x"].astype(x.dtype), state.conv_x)
+    Bp, cb = _causal_conv(Bp, params["conv_B"].astype(x.dtype), state.conv_B)
+    Cp, cc = _causal_conv(Cp, params["conv_C"].astype(x.dtype), state.conv_C)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    Bp = jax.nn.silu(Bp.astype(jnp.float32)).astype(x.dtype)
+    Cp = jax.nn.silu(Cp.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (b,h)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])                            # (b,h)
+
+    xh = xs.reshape(b, h_heads, scfg.headdim).astype(jnp.float32)
+    Bh = Bp.reshape(b, g, n).astype(jnp.float32)
+    Ch = Cp.reshape(b, g, n).astype(jnp.float32)
+    hg = h_heads // g
+
+    dax = xh * dt[..., None]                                    # (b,h,p)
+    dax_g = dax.reshape(b, g, hg, scfg.headdim)
+    decay_g = decay.reshape(b, g, hg)
+
+    new_ssm = state.ssm * decay_g[..., None, None] + jnp.einsum(
+        "bgn,bghp->bghpn", Bh, dax_g
+    )
+    y = jnp.einsum("bgn,bghpn->bghp", Ch, new_ssm)              # (b,g,hg,p)
+    y = y + params["D"].reshape(1, g, hg)[..., None] * xh.reshape(
+        b, g, hg, scfg.headdim
+    )
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"scale": params["gate_norm"]["scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, SSMState(ssm=new_ssm, conv_x=cx, conv_B=cb, conv_C=cc)

@@ -1,0 +1,5 @@
+"""In-house optimizers (no optax dependency)."""
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, clip_by_global_norm, cosine_schedule, momentum,
+    sgd, warmup_cosine,
+)

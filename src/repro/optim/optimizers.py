@@ -1,0 +1,167 @@
+"""Minimal production optimizer stack: sgd / momentum / adam / adamw.
+
+API mirrors the familiar gradient-transform pattern:
+
+    opt = adamw(schedule, b1=0.9, b2=0.95, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer states are plain pytrees whose leaves mirror the parameter tree, so
+they inherit the parameters' PartitionSpecs (FSDP-sharded moments for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any = None       # first moment  (momentum / adam)
+    nu: Any = None       # second moment (adam)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, Optional[PyTree]], Tuple[PyTree, OptState]]
+
+
+def _lr_at(lr: ScalarOrSchedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr: ScalarOrSchedule) -> Optimizer:
+    def init(params):
+        del params
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        a = _lr_at(lr, step)
+        upd = jax.tree.map(lambda g: (-a * g.astype(jnp.float32)).astype(g.dtype), grads)
+        return upd, OptState(step=step)
+
+    return Optimizer(init=init, update=update)
+
+
+def momentum(lr: ScalarOrSchedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        a = _lr_at(lr, step)
+        mu = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state.mu, grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: (-a * (beta * m + g.astype(jnp.float32))).astype(g.dtype),
+                mu, grads,
+            )
+        else:
+            upd = jax.tree.map(lambda m, g: (-a * m).astype(g.dtype), mu, grads)
+        return upd, OptState(step=step, mu=mu)
+
+    return Optimizer(init=init, update=update)
+
+
+def _adam_core(
+    lr: ScalarOrSchedule, b1: float, b2: float, eps: float, weight_decay: float
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        a = _lr_at(lr, step)
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+
+        def upd_leaf(m, v, p):
+            u = -(a * (m / c1) / (jnp.sqrt(v / c2) + eps))
+            if weight_decay and p is not None:
+                u = u - a * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay:
+            if params is None:
+                raise ValueError("adamw.update needs params for weight decay")
+            upd = jax.tree.map(upd_leaf, mu, nu, params)
+        else:
+            upd = jax.tree.map(lambda m, v: upd_leaf(m, v, None), mu, nu)
+        upd = jax.tree.map(lambda u, g: u.astype(g.dtype), upd, grads)
+        return upd, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr: ScalarOrSchedule, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(lr: ScalarOrSchedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        return jnp.where(step <= warmup, warm, cos(step - warmup))
+
+    return fn

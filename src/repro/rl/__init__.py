@@ -1,0 +1,2 @@
+"""JAX-native RL substrate: environments, policies, trajectory sampling."""
+from repro.rl import env, policy, sampler  # noqa: F401

@@ -1,0 +1,144 @@
+"""Pure-JAX environments.
+
+``LandmarkNav`` is the paper's simulation environment (Section IV, from the
+OpenAI particle-env family [29]): the agent and a landmark live in the plane,
+state s = (x, y, x', y'), five discrete actions {stay,left,right,up,down},
+per-step loss l(s,a) = Euclidean distance to the landmark (reward = -l).
+
+``TabularMDP`` is a small finite MDP with *known* transition kernel and loss
+table, for which the exact discounted objective J(theta) — and therefore the
+exact policy gradient via autodiff — can be computed by propagating the state
+distribution.  It anchors the estimator-unbiasedness property tests.
+
+Both are stateless pure-function environments:
+    reset(key)            -> state
+    step(key, state, a)   -> (next_state, loss)
+compatible with ``lax.scan`` rollouts in ``sampler.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LandmarkNav:
+    """The paper's landmark-covering particle task."""
+
+    arena: float = 1.0       # initial positions uniform in [-arena, arena]^2
+    step_size: float = 0.1
+    n_actions: int = 5       # stay, left, right, up, down
+    obs_dim: int = 4
+
+    # action -> displacement table
+    @property
+    def moves(self) -> jnp.ndarray:
+        return jnp.array(
+            [[0.0, 0.0], [-1.0, 0.0], [1.0, 0.0], [0.0, 1.0], [0.0, -1.0]],
+            jnp.float32,
+        ) * self.step_size
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        """state = (x, y, x_landmark, y_landmark)."""
+        return jax.random.uniform(
+            key, (4,), jnp.float32, minval=-self.arena, maxval=self.arena
+        )
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        del key  # deterministic dynamics
+        pos = state[:2] + self.moves[action]
+        nxt = jnp.concatenate([pos, state[2:]])
+        loss = self.loss(nxt)
+        return nxt, loss
+
+    def loss(self, state: jax.Array) -> jax.Array:
+        """l(s, a) = distance to landmark (computed on the post-move state)."""
+        d = state[:2] - state[2:]
+        return jnp.sqrt(jnp.sum(d * d) + 1e-12)
+
+    @property
+    def l_bar(self) -> float:
+        """Loss envelope for Assumption 1 given the bounded arena + T moves.
+
+        Positions start in [-a, a]^2 and can drift step_size*T further, so the
+        worst-case distance is bounded.  (Used only for theory tables.)
+        """
+        # conservative: diag of [-(a+0.1*T), a+0.1*T]^2 with T<=20 at build
+        reach = self.arena + self.step_size * 20
+        return float(2.0 * reach * jnp.sqrt(2.0))
+
+
+@dataclass(frozen=True)
+class TabularMDP:
+    """Finite MDP with a known model; supports exact J(theta) by autodiff.
+
+    P:   (S, A, S) transition kernel
+    l:   (S, A) loss table in [0, l_bar]
+    rho: (S,) initial distribution
+    """
+
+    P: jnp.ndarray
+    l: jnp.ndarray
+    rho: jnp.ndarray
+    gamma: float
+    horizon: int
+
+    @property
+    def n_states(self) -> int:
+        return self.P.shape[0]
+
+    @property
+    def n_actions(self) -> int:
+        return self.P.shape[1]
+
+    @property
+    def obs_dim(self) -> int:
+        return self.n_states  # one-hot observation
+
+    @staticmethod
+    def random(key: jax.Array, n_states: int = 4, n_actions: int = 3,
+               gamma: float = 0.9, horizon: int = 5) -> "TabularMDP":
+        kp, kl, kr = jax.random.split(key, 3)
+        logits = jax.random.normal(kp, (n_states, n_actions, n_states))
+        P = jax.nn.softmax(2.0 * logits, axis=-1)
+        l = jax.random.uniform(kl, (n_states, n_actions))
+        rho = jax.nn.softmax(jax.random.normal(kr, (n_states,)))
+        return TabularMDP(P=P, l=l, rho=rho, gamma=gamma, horizon=horizon)
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        s = jax.random.categorical(key, jnp.log(self.rho + 1e-30))
+        return jax.nn.one_hot(s, self.n_states)
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        s = jnp.argmax(state)
+        loss = self.l[s, action]
+        nxt = jax.random.categorical(key, jnp.log(self.P[s, action] + 1e-30))
+        return jax.nn.one_hot(nxt, self.n_states), loss
+
+    def exact_J(self, policy_probs: jnp.ndarray) -> jax.Array:
+        """Exact J = E[sum_{t=0}^{T} gamma^t l(s_t, a_t)] for pi(a|s) table.
+
+        Differentiable in ``policy_probs`` — jax.grad of this (through a
+        softmax parameterisation) is the *exact* policy gradient that the
+        G(PO)MDP estimator must match in expectation.
+
+        Note the paper's objective sums t = 0..T inclusive (T+1 action steps).
+        """
+        def body(carry, _):
+            d, acc, disc = carry
+            step_loss = jnp.sum(d[:, None] * policy_probs * self.l)
+            acc = acc + disc * step_loss
+            # next-state distribution
+            d = jnp.einsum("s,sa,sat->t", d, policy_probs, self.P)
+            return (d, acc, disc * self.gamma), None
+
+        init = (self.rho, jnp.zeros(()), jnp.ones(()))
+        (d, acc, disc), _ = jax.lax.scan(body, init, None, length=self.horizon + 1)
+        return acc

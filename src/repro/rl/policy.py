@@ -1,0 +1,85 @@
+"""Policy parameterisations.
+
+``MLPPolicy`` is the paper's target policy (Section IV): a two-layer network,
+16 hidden ReLU units, softmax output over the discrete action set.
+``TabularSoftmaxPolicy`` (theta[s, a] logits) pairs with ``TabularMDP`` for
+exact-gradient tests.
+
+All policies expose the same pure-function interface over a params pytree:
+    init(key)               -> params
+    logits(params, obs)     -> (n_actions,)
+    log_prob(params, obs, a)-> scalar
+    sample(params, key, obs)-> action
+    action_probs(params)    -> (S, A)        [tabular only]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class MLPPolicy:
+    obs_dim: int = 4
+    hidden: int = 16
+    n_actions: int = 5
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        k1, k2 = jax.random.split(key)
+        scale1 = 1.0 / jnp.sqrt(self.obs_dim)
+        scale2 = 1.0 / jnp.sqrt(self.hidden)
+        return {
+            "w1": jax.random.normal(k1, (self.obs_dim, self.hidden), jnp.float32)
+            * scale1,
+            "b1": jnp.zeros((self.hidden,), jnp.float32),
+            "w2": jax.random.normal(k2, (self.hidden, self.n_actions), jnp.float32)
+            * scale2,
+            "b2": jnp.zeros((self.n_actions,), jnp.float32),
+        }
+
+    def logits(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        h = jax.nn.relu(obs @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def log_prob(self, params: PyTree, obs: jax.Array, action: jax.Array) -> jax.Array:
+        logp = jax.nn.log_softmax(self.logits(params, obs))
+        return logp[action]
+
+    def sample(self, params: PyTree, key: jax.Array, obs: jax.Array) -> jax.Array:
+        return jax.random.categorical(key, self.logits(params, obs))
+
+    def entropy(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        logp = jax.nn.log_softmax(self.logits(params, obs))
+        return -jnp.sum(jnp.exp(logp) * logp)
+
+
+@dataclass(frozen=True)
+class TabularSoftmaxPolicy:
+    n_states: int
+    n_actions: int
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        return {
+            "theta": 0.1
+            * jax.random.normal(key, (self.n_states, self.n_actions), jnp.float32)
+        }
+
+    def logits(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        # obs is one-hot over states
+        return obs @ params["theta"]
+
+    def log_prob(self, params: PyTree, obs: jax.Array, action: jax.Array) -> jax.Array:
+        logp = jax.nn.log_softmax(self.logits(params, obs))
+        return logp[action]
+
+    def sample(self, params: PyTree, key: jax.Array, obs: jax.Array) -> jax.Array:
+        return jax.random.categorical(key, self.logits(params, obs))
+
+    def action_probs(self, params: PyTree) -> jax.Array:
+        """(S, A) table — feeds TabularMDP.exact_J for exact gradients."""
+        return jax.nn.softmax(params["theta"], axis=-1)

@@ -1,0 +1,3 @@
+"""Distributed training/serving steps with OTA aggregation as a first-class
+gradient-aggregation mode."""
+from repro.train import server, trainer  # noqa: F401

@@ -1,0 +1,162 @@
+"""Serving: batched decode steps over sharded KV caches.
+
+``decode_32k`` / ``long_500k`` lower ``serve_step`` — ONE new token against a
+``seq_len`` KV cache.  Cache capacity honours the architecture's serving
+window (DESIGN.md §4): SWA archs and the beyond-paper SWA serving variant use
+a ring buffer of ``window`` slots (sub-quadratic memory); SSM/hybrid archs
+carry O(1) recurrent state.
+
+``cache_specs`` builds the PartitionSpec tree for the cache by mirroring
+``transformer.init_cache``'s structure: batch over ('pod','data') when
+divisible, KV heads over 'model' when divisible, with a sequence-sharded
+fallback for batch=1 long-context serving (flash-decode style).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+from repro.models.model import Model, serve_capacity
+from repro.models.ssm import SSMState
+from repro.models.attention import KVCache
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+def make_serve_step(model: Model, shape: InputShape):
+    """serve_step(params, cache, token) -> (next_token, logits, cache')."""
+    cfg = model.cfg
+    window = cfg.window or cfg.serve_window
+    eff_window = window if (window and window < shape.seq_len) else None
+
+    def serve_step(params, cache, token):
+        logits, cache = transformer.decode(
+            params, cfg, cache, token, window=eff_window
+        )
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return next_token, logits, cache
+
+    return serve_step
+
+
+def init_cache_for_shape(model: Model, shape: InputShape) -> PyTree:
+    cfg = model.cfg
+    cap = serve_capacity(cfg, shape.seq_len)
+    mem_len = transformer.cross_len(cfg, shape.seq_len)
+    cache = model.init_cache(shape.global_batch, cap, mem_len)
+    # decode_32k/long_500k semantics: the cache is already full up to seq_len-1
+    return cache._replace(pos=jnp.asarray(shape.seq_len - 1, jnp.int32))
+
+
+def abstract_cache_for_shape(model: Model, shape: InputShape) -> PyTree:
+    return jax.eval_shape(lambda: init_cache_for_shape(model, shape))
+
+
+# --------------------------------------------------------------------------
+# Cache sharding
+# --------------------------------------------------------------------------
+
+def _axes_ok(mesh: Mesh, axes: Tuple[str, ...], dim: int) -> bool:
+    n = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return False
+        n *= mesh.shape[a]
+    return dim % n == 0 and n > 1
+
+
+def _batch_entry(mesh: Mesh, batch: int):
+    for cand in (("pod", "data"), ("data",)):
+        axes = tuple(a for a in cand if a in mesh.shape)
+        if axes and _axes_ok(mesh, axes, batch):
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree matching init_cache's structure for (cfg, shape)."""
+    batch = shape.global_batch
+    cap = serve_capacity(cfg, shape.seq_len)
+    b_entry = _batch_entry(mesh, batch)
+    kvh = "model" if _axes_ok(mesh, ("model",), max(cfg.n_kv_heads, 1)) else None
+    # The cache sequence dim picks up whatever axes remain unused: 'model'
+    # when the (few) KV heads can't split 16 ways, 'data' when batch=1
+    # (long-context serving) — flash-decode style sequence parallelism.
+    seq_axes = []
+    if b_entry is None:
+        seq_axes.append("data")
+    if kvh is None:
+        seq_axes.append("model")
+    seq_axes = tuple(a for a in seq_axes if a in mesh.shape)
+    seq_entry = None
+    if seq_axes and _axes_ok(mesh, seq_axes, cap):
+        seq_entry = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    def kv_spec(lead: int):
+        # (lead..., B, cap, Hkv, Dh)
+        lead_spec = (None,) * lead
+        return KVCache(
+            k=P(*lead_spec, b_entry, seq_entry, kvh, None),
+            v=P(*lead_spec, b_entry, seq_entry, kvh, None),
+        )
+
+    def ssm_spec(lead: int):
+        d_inner_ok = cfg.ssm and _axes_ok(
+            mesh, ("model",), cfg.ssm.expand * cfg.d_model
+        )
+        din = "model" if d_inner_ok else None
+        hg_total = (cfg.ssm.expand * cfg.d_model) // cfg.ssm.headdim
+        hg = hg_total // cfg.ssm.n_groups
+        heads_ok = _axes_ok(mesh, ("model",), hg)
+        hco = "model" if heads_ok else None
+        lead_spec = (None,) * lead
+        return SSMState(
+            ssm=P(*lead_spec, b_entry, None, hco, None, None),
+            conv_x=P(*lead_spec, b_entry, None, din),
+            conv_B=P(*lead_spec, b_entry, None, None),
+            conv_C=P(*lead_spec, b_entry, None, None),
+        )
+
+    def cross_spec(lead: int):
+        lead_spec = (None,) * lead
+        s = P(*lead_spec, b_entry, None, kvh, None)
+        return (s, s)
+
+    pos = P()
+    fam = cfg.family
+    C = transformer.Cache
+    if fam in ("dense", "moe"):
+        return C(kv=kv_spec(1), pos=pos)
+    if fam == "ssm":
+        return C(ssm=ssm_spec(1), pos=pos)
+    if fam == "hybrid":
+        per = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, per)
+        return C(
+            groups_ssm=ssm_spec(2),
+            groups_kv=kv_spec(1),
+            tail_ssm=ssm_spec(1) if tail else None,
+            pos=pos,
+        )
+    if fam == "vlm":
+        return C(
+            groups_kv=kv_spec(2),
+            cross_self_kv=kv_spec(1),
+            cross_kv=cross_spec(1),
+            pos=pos,
+        )
+    if fam == "encdec":
+        return C(kv=kv_spec(1), cross_kv=cross_spec(1), pos=pos)
+    raise ValueError(fam)

@@ -1,0 +1,145 @@
+"""Parse collective-communication volume out of compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but *not* inter-chip
+traffic, so the roofline's collective term is derived here by scanning the
+compiled per-device module for collective ops.
+
+Modern HLO dumps print operand lists without type annotations, so sizes are
+taken from each op's *result* shape, converted to an approximate per-device
+wire-bytes figure per op kind (ring-algorithm estimates, group size g):
+
+    all-reduce       result R      wire ~ 2R(g-1)/g      -> counted as 2R(g-1)/g
+    all-gather       result R      wire ~ R(g-1)/g       -> R(g-1)/g
+    reduce-scatter   result R      wire ~ R(g-1)         -> R(g-1)
+    all-to-all       result R      wire ~ R(g-1)/g       -> R(g-1)/g
+    collective-permute result R    wire = R              -> R
+
+The compiled module under SPMD partitioning is the per-device program, so
+these are per-chip bytes-on-the-wire estimates.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "bf16[256,4096,1024]" or "f32[]" (scalar)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+# "%x = f32[8,1,3072]{2,1,0} all-reduce(" or "= (f32[..], f32[..]) all-gather-start("
+_OP_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(_COLLECTIVE_OPS) + r")(-start|-done)?\("
+)
+
+# replica_groups=[16,16]<=[256]  (16 groups of 16)  |  iota forms with dims
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# replica_groups={{0,1,2,...},{...}}
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0  # token/opaque types carry no payload
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def _result_bytes(result_region: str) -> int:
+    return sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_region))
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_BRACKET_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def _wire_bytes(kind: str, result: int, g: Optional[int]) -> float:
+    g = g if g and g > 1 else 2  # conservative default when groups unparsable
+    if kind == "all-reduce":
+        return 2.0 * result * (g - 1) / g
+    if kind in ("all-gather", "all-to-all", "ragged-all-to-all",
+                "collective-broadcast"):
+        return result * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result * (g - 1))
+    return float(result)  # collective-permute
+
+
+@dataclass
+class CollectiveStats:
+    """Per-op-kind wire-byte totals for one HLO module (per-device view)."""
+
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind[k]} bytes={self.bytes_by_kind[k]:,.0f}"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "no collectives"
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Estimate per-device wire bytes of every collective in an HLO dump.
+
+    ``-done`` halves of async collectives are skipped; for ``-start`` forms
+    the result tuple contains (operand, result) so its byte count is halved.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if m is None:
+            continue
+        kind, variant = m.group(2), m.group(3)
+        if variant == "-done":
+            continue
+        result = _result_bytes(m.group(1))
+        if variant == "-start":
+            result //= 2
+        nbytes = _wire_bytes(kind, result, _group_size(line))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    """Count occurrences of an opcode (e.g. 'fusion', 'dot') in HLO text."""
+    return len(re.findall(rf"=\s*[^=]*\b{re.escape(opcode)}\(", hlo_text))

@@ -1,0 +1,81 @@
+"""Roofline terms for TPU v5e, derived from a compiled dry-run artifact.
+
+Three-term model (all per-chip seconds; the compiled SPMD module is the
+per-device program, so ``cost_analysis`` FLOPs/bytes are already per chip):
+
+    compute term    = HLO_FLOPs  / peak_FLOPs_per_chip
+    memory term     = HLO_bytes  / HBM_bw_per_chip
+    collective term = collective_bytes / ICI_bw_per_chip
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. We charge collectives against a single link's bandwidth — the
+conservative end (ring collectives stream over one link per direction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Optional
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_LINK_BW = 50e9        # bytes/s per link
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float          # per-chip, from compiled.cost_analysis()
+    hlo_bytes: float          # per-chip HBM traffic, from cost_analysis()
+    collective_bytes: float   # per-chip, from utils.hlo parser
+    model_flops: float        # 6*N*D (dense) / 6*N_active*D (MoE), per chip
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_flop_ratio: float = 0.0   # MODEL_FLOPS / HLO_FLOPs
+    step_time_s: float = 0.0         # max of the three terms (no overlap)
+    mfu: float = 0.0                 # model_flops / (step_time * peak)
+    note: str = ""
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.hlo_flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_LINK_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.dominant = max(terms, key=terms.get)
+        self.useful_flop_ratio = (
+            self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+        )
+        self.step_time_s = max(terms.values())
+        self.mfu = (
+            self.model_flops / (self.step_time_s * PEAK_FLOPS_BF16)
+            if self.step_time_s
+            else 0.0
+        )
+        return self
+
+    def row(self) -> dict:
+        return asdict(self)
+
+
+def model_flops_per_step(
+    *,
+    n_params_active: int,
+    tokens: int,
+    training: bool,
+) -> float:
+    """The classic 6ND (train) / 2ND (inference fwd) useful-FLOPs estimate.
+
+    ``n_params_active``: for MoE, embedding+attn+router plus top_k experts'
+    FFN params; for dense, all params. ``tokens``: tokens processed this step
+    (decode = batch * 1).
+    """
+    mult = 6.0 if training else 2.0
+    return mult * float(n_params_active) * float(tokens)

@@ -1,0 +1,127 @@
+"""Logical-axis sharding hints for activation constraints.
+
+Model code is mesh-agnostic; launchers activate hints mapping *logical*
+activation axes ('heads', 'q_seq', 'batch', ...) to mesh axes for the
+duration of tracing/lowering.  ``constrain(x, ...axes)`` then inserts
+``with_sharding_constraint`` where it matters (attention internals), steering
+GSPMD away from replicated attention compute:
+
+* head-sharded attention (Megatron TP) when n_heads % |model| == 0,
+* context-parallel attention (shard the query sequence over 'model')
+  otherwise — the fallback that keeps e.g. 24-head llama3.2-3b sharded on a
+  16-way model axis.
+
+Outside a hints context every ``constrain`` is a no-op, so tests and eager
+code never need a mesh.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: Dict = {"mesh": None, "map": {}}
+
+
+@contextmanager
+def hints(mesh: Mesh, **logical_to_mesh):
+    """Activate hints, e.g. hints(mesh, heads='model', batch=('pod','data'))."""
+    prev = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["map"] = {k: v for k, v in logical_to_mesh.items() if v is not None}
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def has(name: str) -> bool:
+    """Whether a logical axis name is mapped in the active hints."""
+    return name in _STATE["map"]
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names.
+
+    Dims that don't resolve to a concrete mesh axis (unknown/unmapped name,
+    literal None, or non-divisible size) are left UNCONSTRAINED — GSPMD keeps
+    full freedom there; a constraint with NO resolved dim is skipped
+    entirely.  (Forcing replication on unresolved dims measurably regressed
+    MoE training and SSM prefill — EXPERIMENTS.md §Perf.)  No-op outside a
+    hints context.
+    """
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    entries = []
+    used = set()
+    any_resolved = False
+    for a in axes:
+        ent = _STATE["map"].get(a) if a else None
+        if ent is not None:
+            axs = (ent,) if isinstance(ent, str) else tuple(ent)
+            axs = tuple(m for m in axs if m in mesh.shape and m not in used)
+            size = 1
+            for m in axs:
+                size *= mesh.shape[m]
+            dim = x.shape[len(entries)]
+            if not axs or size <= 1 or dim % size != 0:
+                ent = None
+            else:
+                used.update(axs)
+                ent = axs if len(axs) > 1 else axs[0]
+                any_resolved = True
+        entries.append(ent if ent is not None else P.UNCONSTRAINED)
+    if not any_resolved:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def attn_hints(cfg, mesh: Mesh, kind: str = "train") -> Dict[str, object]:
+    """Pick head-sharding vs context-parallel for this arch on this mesh.
+
+    ``kind``: "train" | "prefill" | "decode" — a few constraints are only
+    beneficial on one side (see inline notes)."""
+    model_sz = mesh.shape.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    out: Dict[str, object] = {"batch": batch_axes}
+    if cfg.n_heads and cfg.n_heads % model_sz == 0:
+        out["heads"] = "model"
+    elif cfg.n_heads:
+        # context-parallel fallback — attention archs only; sharding the
+        # sequence under an SSM recurrence reshards every chunked-scan step
+        out["q_seq"] = "model"
+    # activation-sharding discipline: pin the MLP/MoE hidden activations to
+    # (batch -> data, d_ff -> model).  Without this, GSPMD sometimes resolves
+    # the FSDP weight-sharding conflict by ALL-GATHERING ACTIVATIONS over the
+    # batch axis in f32 (measured 5.9 GB/layer/microbatch on deepseek-67b —
+    # EXPERIMENTS.md §Perf) instead of un-sharding the weights.
+    if cfg.d_ff and cfg.d_ff % model_sz == 0:
+        out["d_ff"] = "model"
+    if cfg.moe is not None:
+        if cfg.moe.num_experts % model_sz == 0:
+            out["experts"] = "model"
+        # Sharding the capacity dim over data is a pure win for serve paths
+        # (kills the 16x global-capacity replication, §Perf Pair 1b) but a
+        # large regression under training's per-microbatch grad reduction
+        # (the f32 buffer cotangents reshard every layer) — measured 169 ->
+        # 722 s collective on mixtral train. Serve-only.
+        if kind != "train":
+            out["moe_cap"] = batch_axes
+    if cfg.ssm is not None:
+        d_in = cfg.ssm.expand * cfg.d_model
+        n_ssm_heads = d_in // cfg.ssm.headdim
+        if n_ssm_heads % model_sz == 0:
+            out["ssm_heads"] = "model"
+            # only pin d_inner when the SSD heads shard too — otherwise each
+            # layer reshards model-sharded projections to a replicated SSD
+            # and back (measured 4x memory-term regression on mamba2-130m)
+            if d_in % model_sz == 0:
+                out["d_inner"] = "model"
+    return out

@@ -1,0 +1,129 @@
+"""Pytree utilities used across the framework.
+
+All model parameters in this framework are plain nested dicts of jnp arrays
+(no flax/optax dependency).  These helpers cover the recurring patterns:
+global norms, tree-wide random perturbations, leaf counting, and structural
+zip-maps between a parameter tree and a parallel "spec" tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements across all leaves."""
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes across all leaves (respects dtype)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_global_norm(tree: PyTree) -> jax.Array:
+    """sqrt(sum of squared leaves) — the ||.|| used in the paper's analysis."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_global_norm_sq(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, c) -> PyTree:
+    return jax.tree.map(lambda x: x * c, tree)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    """Inner product <a, b> across the whole tree (float32 accumulation)."""
+    parts = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return sum(jax.tree.leaves(parts))
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_normal_like(key: jax.Array, tree: PyTree, stddev: float = 1.0) -> PyTree:
+    """A tree of iid N(0, stddev^2) noise with the same structure/shapes.
+
+    This is the server-side AWGN `n_k ~ N(0, sigma^2 I_d)` of Eq. (6), applied
+    leaf-wise so the concatenation of all leaves is the d-dimensional vector.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype) * stddev
+        for k, x in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """Map fn(path_string, leaf) over the tree; path is '/'-joined dict keys."""
+
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_fmt(p), x), tree)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}FLOP"
+        n /= 1000.0
+    return f"{n:.2f}EFLOP"
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))

@@ -1,0 +1,38 @@
+"""Global scan-unroll switch for cost calibration.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
+count, so FLOPs/bytes/collectives of scanned layer stacks are undercounted.
+The dry-run therefore lowers *shallow, fully-unrolled* calibration variants
+(identical per-layer shapes) to measure per-body costs and extrapolates to
+the true depth (launch/dryrun.py::calibrated_costs).
+
+All framework scans go through :func:`scan` so the calibration pass can flip
+them to ``unroll=True`` process-wide.  Never enabled outside the dry-run.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+@contextmanager
+def unrolled(enable: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = enable
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan that honours the calibration unroll flag."""
+    return jax.lax.scan(f, init, xs, length=length, unroll=True if _UNROLL else 1)

@@ -1,0 +1,62 @@
+"""Channel models: sampled moments must match the closed-form (m_h, sigma_h^2)
+the convergence theory uses, and the paper's two settings must satisfy /
+violate the Theorem-1 condition exactly as claimed."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import (
+    IdealChannel, LogNormalChannel, NakagamiChannel, RayleighChannel,
+    make_channel, noise_sigma_from_db,
+)
+
+N_SAMPLES = 200_000
+
+
+@pytest.mark.parametrize(
+    "ch,tol",
+    [
+        (RayleighChannel(), 0.02),
+        (RayleighChannel(scale=2.0), 0.04),
+        (NakagamiChannel(m=0.1, omega=1.0), 0.03),
+        (NakagamiChannel(m=1.0, omega=2.0), 0.03),
+        (LogNormalChannel(mu=0.0, sigma=0.25), 0.02),
+    ],
+)
+def test_channel_moments(ch, tol):
+    h = ch.sample(jax.random.key(42), (N_SAMPLES,))
+    assert jnp.all(h >= 0.0), "gains must be non-negative"
+    assert abs(float(jnp.mean(h)) - ch.mean) < tol * max(ch.mean, 1.0)
+    assert abs(float(jnp.var(h)) - ch.var) < 3 * tol * max(ch.var, 1.0)
+
+
+def test_paper_rayleigh_constants():
+    ch = RayleighChannel()
+    assert ch.mean == pytest.approx(math.sqrt(math.pi / 2))
+    assert ch.var == pytest.approx((4 - math.pi) / 2)
+    # paper: condition holds for all N under Rayleigh
+    for n in (1, 2, 10, 100):
+        assert ch.satisfies_theorem1(n)
+
+
+def test_paper_nakagami_violates_condition_for_small_n():
+    ch = NakagamiChannel(m=0.1, omega=1.0)
+    # paper: sigma_h^2 ~= 10 m_h^2
+    assert ch.var / ch.mean**2 == pytest.approx(10.0, rel=0.05)
+    assert not ch.satisfies_theorem1(5)     # 5+1 < 10+... violated
+    assert ch.satisfies_theorem1(20)        # enough agents restores it
+
+
+def test_ideal_channel_and_factory():
+    assert IdealChannel().mean == 1.0 and IdealChannel().var == 0.0
+    assert isinstance(make_channel("rayleigh"), RayleighChannel)
+    with pytest.raises(ValueError):
+        make_channel("does-not-exist")
+
+
+def test_noise_sigma_from_db():
+    # paper: sigma^2 = -60 dB
+    assert noise_sigma_from_db(-60.0) ** 2 == pytest.approx(1e-6)
+    assert noise_sigma_from_db(0.0) == pytest.approx(1.0)

@@ -1,0 +1,87 @@
+"""Dry-run machinery: tiny-mesh subprocess lowering (multi-device semantics
+need a fresh process with the host-device flag), calibration consistency,
+and cache spec structure."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+from repro.models import model as model_lib
+from repro.train import server
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("llama3.2-3b", "decode_32k"),
+        ("granite-moe-1b-a400m", "train_4k"),
+        ("mamba2-130m", "long_500k"),
+    ],
+)
+def test_tiny_mesh_dryrun_subprocess(arch, shape, tmp_path):
+    out = str(tmp_path / "dry")
+    r = _run_dryrun(
+        ["--arch", arch, "--shape", shape, "--tiny", "2", "--no-calibrate",
+         "--out", out]
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    files = os.listdir(out)
+    assert len(files) == 1
+    rec = json.load(open(os.path.join(out, files[0])))
+    assert rec["roofline"]["hlo_flops"] > 0
+    assert "CompiledMemoryStats" in rec["memory_analysis"]
+
+
+def test_cache_specs_structure_matches_cache():
+    """cache_specs must mirror init_cache's pytree exactly for every family
+    (a structure mismatch would break the decode in_shardings)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("llama3.2-3b", "mamba2-130m", "zamba2-7b",
+                 "llama-3.2-vision-11b", "seamless-m4t-large-v2",
+                 "mixtral-8x22b"):
+        cfg = get_config(arch)
+        shape = get_shape("decode_32k")
+        m = model_lib.build(cfg)
+        cache = server.abstract_cache_for_shape(m, shape)
+        specs = server.cache_specs(cfg, shape, mesh)
+        t1 = jax.tree.structure(cache)
+        t2 = jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        assert t1 == t2, (arch, t1, t2)
+
+
+def test_default_microbatch_heuristic():
+    from repro.launch.dryrun import _default_microbatch
+    big = get_config("deepseek-67b")
+    small = get_config("granite-moe-1b-a400m")
+    train = get_shape("train_4k")
+    assert _default_microbatch(big, train, 16) == 16   # 1 seq/agent/micro
+    assert _default_microbatch(small, train, 16) == 1
+
+
+def test_input_specs_no_allocation():
+    """abstract_inputs returns ShapeDtypeStructs only (zero device memory)."""
+    for arch in ("deepseek-67b", "seamless-m4t-large-v2"):
+        cfg = get_config(arch)
+        for sh in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            specs = model_lib.abstract_inputs(cfg, get_shape(sh))
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)

@@ -1,0 +1,153 @@
+"""Per-kernel allclose vs the ref.py jnp oracles, swept over shapes/dtypes
+(interpret=True executes the kernel bodies on CPU), plus hypothesis
+properties on the OTA update."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ota_channel import ota_channel_apply
+from repro.kernels.ssd_scan import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d,causal,window",
+    [
+        (1, 2, 2, 128, 64, True, None),
+        (2, 4, 2, 256, 64, True, None),      # GQA g=2
+        (1, 8, 2, 256, 128, True, None),     # GQA g=4
+        (1, 2, 1, 256, 64, True, 128),       # sliding window
+        (2, 2, 2, 384, 64, False, None),     # bidirectional (encoder)
+        (1, 3, 1, 128, 112, True, None),     # zamba2 head_dim=112
+    ],
+)
+def test_flash_attention_sweep(b, h, hkv, s, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.key(b * s + h + d), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_k=128)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    o1 = flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = flash_attention(q, k, v, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,g,n,chunk",
+    [
+        (1, 128, 2, 64, 1, 64, 64),
+        (2, 256, 4, 64, 1, 128, 128),        # mamba2-130m-like
+        (1, 256, 4, 32, 2, 16, 64),          # grouped B/C
+        (2, 128, 8, 64, 2, 64, 32),
+    ],
+)
+def test_ssd_sweep(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.key(s + h * p), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1).astype(dtype)
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,), minval=0.0, maxval=1.0))
+    B = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, s, g, n)) * 0.5).astype(dtype)
+    out = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    expected = ref.ssd_ref(x, dt, A, B, C, chunk)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_ssd_chunk_invariance_and_sequential_truth():
+    ks = jax.random.split(jax.random.key(11), 5)
+    b, s, h, p, g, n = 1, 256, 2, 32, 1, 32
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    o64 = ssd_scan(x, dt, A, B, C, chunk=64)
+    o128 = ssd_scan(x, dt, A, B, C, chunk=128)
+    seq = ref.ssd_sequential_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(o64), np.asarray(o128), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o64), np.asarray(seq), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# OTA channel update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(17,), (100, 37), (3, 5, 129)])
+def test_ota_noiseless_exact(shape, dtype):
+    v = jax.random.normal(jax.random.key(1), shape, jnp.float32).astype(dtype)
+    out = ota_channel_apply(v, sigma=0.0, n_agents=7, m_h=1.2533)
+    expected = (v.astype(jnp.float32) / (7 * 1.2533)).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), rtol=1e-2,
+                               atol=1e-6)
+
+
+def test_ota_noise_statistics():
+    v = jnp.zeros((512, 512), jnp.float32)
+    out = ota_channel_apply(v, sigma=1.0, n_agents=1, m_h=1.0, seed=5)
+    flat = np.asarray(out).ravel()
+    assert abs(flat.mean()) < 0.01
+    assert abs(flat.std() - 1.0) < 0.01
+    # tail sanity: P(|z|>3) ~ 0.27%
+    assert 0.001 < (np.abs(flat) > 3).mean() < 0.006
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 1000),
+    n_agents=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ota_property_determinism_and_scale(n, n_agents, seed):
+    v = jnp.arange(n, dtype=jnp.float32).reshape(n)
+    a = ota_channel_apply(v, sigma=0.5, n_agents=n_agents, seed=seed)
+    b = ota_channel_apply(v, sigma=0.5, n_agents=n_agents, seed=seed)
+    assert bool(jnp.all(a == b))
+    # recovering v: (out*N - noise) linearity check via sigma=0 path
+    c = ota_channel_apply(v, sigma=0.0, n_agents=n_agents, seed=seed)
+    np.testing.assert_allclose(np.asarray(c) * n_agents, np.asarray(v),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_agreement():
+    """ops.py: pallas and ref paths agree on the same inputs."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 1, 128, 64))
+    v = jax.random.normal(ks[2], (1, 1, 128, 64))
+    a = ops.attention(q, k, v, use_pallas=True)
+    b = ops.attention(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

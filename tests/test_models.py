@@ -1,0 +1,200 @@
+"""Per-arch smoke tests (assignment requirement) + structural equalities:
+decode == full forward, SSD chunked == sequential step, SWA ring cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as model_lib
+from repro.models import transformer as T
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.param import init_params
+
+
+def _mem(cfg, key, b, s):
+    if not model_lib.needs_memory(cfg):
+        return None
+    ml = T.cross_len(cfg, s)
+    return jax.random.normal(key, (b, ml, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, key):
+    """Reduced same-family config: one forward + one train step on CPU,
+    asserting output shapes and finiteness (assignment smoke contract)."""
+    from repro.train import trainer
+    from repro.configs.base import InputShape
+    from repro.data.pipeline import make_batch
+
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    m = model_lib.build(cfg)
+    params = m.init(key)
+    b, s = 2, 64
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    logits, aux = m.forward(params, tokens, _mem(cfg, key, b, s))
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    shape = InputShape("smoke", seq_len=32, global_batch=4, kind="train")
+    batch = make_batch(cfg, shape, 0)
+    tcfg = trainer.TrainConfig(n_agents=2, microbatch=2, total_steps=4)
+    state = trainer.init_state(m, tcfg, key)
+    step = jax.jit(trainer.make_train_step(m, tcfg))
+    state, metrics = step(state, batch, jax.random.key(9))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, key):
+    """Token-by-token decode reproduces the full-sequence logits (MoE archs
+    with a no-drop capacity factor, since batched dispatch drops overflow)."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    m = model_lib.build(cfg)
+    params = m.init(key)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab)
+    mem = _mem(cfg, key, b, s)
+    full, _ = m.forward(params, tokens, mem)
+
+    cache = m.init_cache(b, s, mem_len=(mem.shape[1] if mem is not None else 0))
+    if mem is not None:
+        memdt = mem.astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "encdec":
+            enc = T.encode(params, cfg, mem)
+            ckv = jax.vmap(lambda lp: A.project_memory(lp["cross"], enc))(
+                params["layers"])
+        else:
+            ckv = jax.vmap(lambda cl: A.project_memory(cl["cross"], memdt))(
+                params["cross_layers"])
+        cache = cache._replace(cross_kv=ckv)
+
+    dec = jax.jit(lambda c, t: m.decode(params, c, t))
+    outs = []
+    for t in range(s):
+        lg, cache = dec(cache, tokens[:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, 1)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    err = float(jnp.max(jnp.abs(got - full))) / scale
+    assert err < 2e-2, err
+
+
+def test_prefill_then_decode_continues(key):
+    """prefill(s tokens) + decode(s+1th) == forward over s+1 tokens."""
+    cfg = get_smoke_config("internlm2-20b")
+    m = model_lib.build(cfg)
+    params = m.init(key)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.key(3), (b, s + 1), 0, cfg.vocab)
+    full, _ = m.forward(params, tokens)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    last_logits, cache = m.prefill(params, tokens[:, :s])
+    assert float(jnp.max(jnp.abs(last_logits[:, 0] - full[:, s - 1]))) / scale < 2e-2
+    # continue decoding: copy the s-slot prefill KV into a larger buffer
+    # (capacity must exceed the prompt, else the ring wraps — production
+    # serving allocates prompt+generation slots, cf. examples/serve_smoke.py)
+    big = m.init_cache(b, s + 8)
+    big = big._replace(
+        kv=jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice(
+                dst, src, (0,) * dst.ndim),
+            big.kv, cache.kv,
+        ),
+        pos=cache.pos,
+    )
+    lg, _ = m.decode(params, big, tokens[:, s:s + 1])
+    assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, s]))) / scale < 2e-2
+
+
+def test_swa_ring_cache_matches_windowed_forward(key):
+    """Ring-buffered decode with capacity == window reproduces full-cache
+    windowed attention — the sub-quadratic long_500k serving path."""
+    cfg = get_smoke_config("mixtral-8x22b")  # window=64 in smoke cfg
+    cfg = cfg.with_(window=8, serve_window=8,
+                    moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    m = model_lib.build(cfg)
+    params = m.init(key)
+    b, s = 1, 24
+    tokens = jax.random.randint(jax.random.key(4), (b, s), 0, cfg.vocab)
+    full, _ = m.forward(params, tokens)  # windowed attention (window=8)
+
+    ring = m.init_cache(b, 8)            # ring capacity == window
+    outs = []
+    for t in range(s):
+        lg, ring = m.decode(params, ring, tokens[:, t:t + 1], window=8)
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, 1)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    assert float(jnp.max(jnp.abs(got - full))) / scale < 2e-2
+
+
+def test_ssd_chunked_equals_recurrent_step(key):
+    """models/ssm.py: ssd_ref (chunked, train path) == ssm_step rollout
+    (decode path) through a full mixer layer."""
+    cfg = get_smoke_config("mamba2-130m")
+    plan = S.ssm_plan(cfg)
+    params = init_params(key, plan)
+    b, s = 2, 64
+    x = 0.5 * jax.random.normal(jax.random.key(5), (b, s, cfg.d_model),
+                                jnp.float32)
+    full = S.ssm_mixer(params, x, cfg)
+    state = S.init_state(cfg, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        y, state = S.ssm_step(params, x[:, t:t + 1], state, cfg)
+        outs.append(y[:, 0])
+    got = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_actual(key):
+    """cfg.param_counts() total must match the real parameter tree within 2%
+    (it feeds the 6ND roofline term)."""
+    for arch in ("llama3.2-3b", "mixtral-8x22b", "mamba2-130m", "zamba2-7b"):
+        cfg = get_config(arch)
+        m = model_lib.build(cfg)
+        abstract = m.abstract()
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+        declared, active = cfg.param_counts()
+        assert abs(actual - declared) / actual < 0.02, (arch, actual, declared)
+        if cfg.family != "hybrid":
+            # hybrid re-applies the shared attn block, so per-token active
+            # params legitimately exceed stored params
+            assert active <= declared or cfg.tie_embeddings
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters."""
+    c = get_config("deepseek-67b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (95, 8192, 64, 8, 22016, 102400)
+    c = get_config("mixtral-8x22b")
+    assert c.moe.num_experts == 8 and c.moe.top_k == 2 and c.window == 4096
+    c = get_config("granite-moe-1b-a400m")
+    assert c.moe.num_experts == 32 and c.moe.top_k == 8
+    c = get_config("mamba2-130m")
+    assert c.ssm.state == 128 and c.n_heads == 0
+    c = get_config("zamba2-7b")
+    assert c.ssm.state == 64 and c.n_layers == 81
+    c = get_config("seamless-m4t-large-v2")
+    assert c.vocab == 256206 and c.family == "encdec"
+    c = get_config("llama-3.2-vision-11b")
+    assert c.cross_attn_every == 5 and c.n_layers == 40
+    c = get_config("starcoder2-15b")
+    assert c.n_kv_heads == 4 and c.d_ff == 24576
+    c = get_config("internlm2-20b")
+    assert c.n_layers == 48 and c.vocab == 92544
+    c = get_config("llama3.2-3b")
+    assert c.n_layers == 28 and c.d_model == 3072

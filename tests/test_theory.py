@@ -1,0 +1,139 @@
+"""Theory module: constants, bound structure (monotonicity/limits that the
+paper claims), and the Lemma 3 bound validated against simulation."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ota, theory
+from repro.core.channel import NakagamiChannel, RayleighChannel
+from repro.rl.env import TabularMDP
+from repro.rl.policy import TabularSoftmaxPolicy
+from repro.rl.sampler import rollout_batch
+from repro.core import gpomdp
+from repro.utils.tree import tree_global_norm_sq, tree_sub
+
+
+def test_smoothness_constant_formula():
+    c = theory.MDPConstants(G=2.0, F=1.0, l_bar=1.0, gamma=0.9)
+    # L = (F + G^2 + 2 gamma G^2/(1-gamma)) * gamma*l_bar/(1-gamma)^2
+    expected = (1 + 4 + 2 * 0.9 * 4 / 0.1) * (0.9 / 0.01)
+    assert c.smoothness_L() == pytest.approx(expected)
+    assert c.V() == pytest.approx(2.0 * 1.0 * 0.9 / 0.01)
+    assert c.max_stepsize(m_h=2.0) == pytest.approx(1.0 / (2.0 * expected))
+
+
+def test_lambda_and_condition():
+    ray = RayleighChannel()
+    nak = NakagamiChannel(m=0.1, omega=1.0)
+    assert theory.channel_condition_ok(1, ray.mean, ray.var)
+    assert not theory.channel_condition_ok(5, nak.mean, nak.var)
+    # Lambda > 0 iff the step's descent term survives (Thm 1 denominator)
+    assert theory.Lambda(10, 5, ray.mean, ray.var) > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    m=st.integers(1, 64),
+    k=st.integers(10, 10_000),
+)
+def test_theorem1_monotone_in_K_and_N_floor(n, m, k):
+    """More rounds never worsen the bound (only the first term carries K);
+    more agents never worsen the K->inf variance floor (the linear-speedup
+    claim applies to the floor — the transient term's N/(N+1) factor makes
+    the full bound non-monotone in N at small K, by design of Eq. 10)."""
+    ch = RayleighChannel()
+    kw = dict(
+        batch_m=m, alpha=1e-3, m_h=ch.mean, sigma_h2=ch.var,
+        noise_sigma2=1e-6, delta_J=10.0, V=5.0,
+    )
+    b = theory.theorem1_bound(K=k, n_agents=n, **kw)
+    b_k = theory.theorem1_bound(K=2 * k, n_agents=n, **kw)
+    assert b_k <= b + 1e-12
+    floor_n = theory.theorem1_bound(K=10**12, n_agents=n, **kw)
+    floor_2n = theory.theorem1_bound(K=10**12, n_agents=2 * n, **kw)
+    assert floor_2n <= floor_n + 1e-12
+
+
+def test_linear_speedup_structure():
+    """Theorem 1: with K ~ N*M scaling out, the variance terms decay as
+    1/(N...) — doubling N roughly halves the non-K terms (linear speedup)."""
+    ch = RayleighChannel()
+    kw = dict(batch_m=10, alpha=1e-3, m_h=ch.mean, sigma_h2=ch.var,
+              noise_sigma2=1e-6, delta_J=10.0, V=5.0, K=10**9)
+    floors = [theory.theorem1_bound(n_agents=n, **kw) for n in (8, 16, 32)]
+    r1 = floors[0] / floors[1]
+    r2 = floors[1] / floors[2]
+    assert 1.7 < r1 < 2.3 and 1.7 < r2 < 2.3
+
+
+def test_theorem2_channel_floor_independent_of_K_M():
+    """Remark 3: the O(1/N) channel-variance floor is not reduced by K or M."""
+    ch = NakagamiChannel(m=0.1, omega=1.0)
+
+    def floor(K, M):
+        full = theory.theorem2_bound(
+            K=K, n_agents=10, batch_m=M, alpha=1e-3, m_h=ch.mean,
+            sigma_h2=ch.var, noise_sigma2=1e-6, delta_J=10.0, V=5.0,
+        )
+        return full
+
+    # increasing K and M cannot drive the bound to 0: term2 ~ M sigma_h^2 V^2 / denom
+    b = floor(10**9, 10**6)
+    denom = 10**6 * 11 * ch.mean**2 + ch.var
+    analytic_floor = (10**6 * ch.var * 25.0) / denom
+    assert b >= analytic_floor * 0.99
+    assert analytic_floor > 0.01  # a real floor, not epsilon
+
+
+def test_corollary1_schedule():
+    s = theory.corollary1_schedule(1e-2)
+    assert s.K == 100
+    assert s.n_agents == 10
+    assert s.batch_m == math.ceil(1.0 / (10 * 1e-2))
+    s2 = theory.corollary1_schedule(1e-4)
+    assert s2.K == 100 * s.K               # K = O(1/eps)
+    assert s2.n_agents == 10 * s.n_agents  # N = O(1/sqrt(eps))
+
+
+def test_lemma3_bound_holds_empirically():
+    """E||v/(m_h N) - grad J||^2 <= Lemma-3 RHS on a tabular MDP where the
+    exact gradient (hence exact ||grad J||^2) is computable."""
+    mdp = TabularMDP.random(jax.random.key(0), n_states=3, n_actions=2,
+                            gamma=0.9, horizon=3)
+    pol = TabularSoftmaxPolicy(3, 2)
+    theta = pol.init(jax.random.key(1))
+    g_exact = jax.grad(lambda p: mdp.exact_J(pol.action_probs(p)))(theta)
+    grad_sq = float(tree_global_norm_sq(g_exact))
+
+    ch = RayleighChannel()
+    n_agents, batch_m, sigma = 4, 2, 1e-3
+    cfg = ota.OTAConfig(channel=ch, noise_sigma=sigma, debias=True)
+
+    @jax.jit
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        ks = jax.random.split(k1, n_agents)
+
+        def agent(ka):
+            traj = rollout_batch(mdp, pol, theta, ka, mdp.horizon, batch_m)
+            return gpomdp.gpomdp_gradient(pol, theta, traj, mdp.gamma)
+
+        grads = jax.vmap(agent)(ks)
+        u, _ = ota.aggregate_stacked(cfg, k2, grads)
+        return tree_global_norm_sq(tree_sub(u, g_exact))
+
+    errs = jax.vmap(one)(jax.random.split(jax.random.key(2), 2000))
+    empirical = float(jnp.mean(errs))
+
+    # V envelope: sup per-trajectory G(PO)MDP norm; G <= sqrt(2*S) for the
+    # tabular softmax (one-hot obs), l_bar = 1, per Assumption 1/2.
+    consts = theory.MDPConstants(G=math.sqrt(2.0), F=0.5, l_bar=1.0, gamma=0.9)
+    bound = theory.lemma3_bound(
+        n_agents=n_agents, batch_m=batch_m, m_h=ch.mean, sigma_h2=ch.var,
+        noise_sigma2=sigma**2, V=consts.V(), grad_sq=grad_sq,
+    )
+    assert empirical <= bound, (empirical, bound)
