@@ -32,12 +32,29 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 
 
 def run_setting(env, pol, cfg, ota, mc_runs: int, seed: int = 0):
-    """Monte Carlo fedpg histories (vmapped); returns (rewards, grad_sq)."""
+    """Monte Carlo fedpg histories (vmapped); returns (rewards, grad_sq).
+
+    The naive per-scenario path — one fresh XLA program per call.  Kept as
+    the reference the sweep engine is tested bit-identical against; new
+    benchmarks should declare a scenario grid and use ``run_sweep``.
+    """
     from repro.core import fedpg
 
     hist = fedpg.monte_carlo(env, pol, cfg, jax.random.key(seed), mc_runs,
                              ota=ota)
     return hist.rewards, hist.grad_sq
+
+
+def run_sweep(env, pol, scenarios, mc_runs: int, seed: int = 0):
+    """Run a declarative scenario list through the batched sweep engine.
+
+    One compiled program per structural partition; every scenario shares the
+    Monte-Carlo key set of ``jax.random.key(seed)`` — the same keys the
+    per-scenario ``run_setting(..., seed=seed)`` calls would use.
+    """
+    from repro.core.sweep import sweep
+
+    return sweep(env, pol, scenarios, jax.random.key(seed), mc_runs)
 
 
 def final_reward(rewards: jnp.ndarray, tail: int = 20) -> float:

@@ -1,18 +1,21 @@
 """Paper Figs. 1-2: effect of batch size M and agent count N under the
 Rayleigh channel (alpha = 1e-4 in the paper; we use a slightly larger step
 and fewer MC runs to fit the CPU budget — trends, not absolute values, are
-the claim)."""
-from __future__ import annotations
+the claim).
 
-import time
+Declarative grid + post-processing table over the scenario-sweep engine:
+each (N, M) point is its own structural shape, so the engine compiles one
+program per point and reproduces the per-scenario path bit-for-bit.
+"""
+from __future__ import annotations
 
 from repro.configs.ota_pg_particle import RAYLEIGH
 from repro.core.channel import make_channel
-from repro.core.ota import OTAConfig
+from repro.core.sweep import Scenario
 from repro.rl.env import LandmarkNav
 from repro.rl.policy import MLPPolicy
 
-from benchmarks.common import avg_grad_sq, emit, final_reward, run_setting
+from benchmarks.common import emit, run_sweep
 
 SETTINGS = [  # (N, M)
     (1, 10), (5, 10), (10, 10),   # N sweep at M=10  (Fig. 2 linear speedup)
@@ -20,23 +23,29 @@ SETTINGS = [  # (N, M)
 ]
 
 
+def scenarios(n_rounds: int, alpha: float):
+    channel = make_channel(RAYLEIGH.channel, **dict(RAYLEIGH.channel_kwargs))
+    return [
+        Scenario(
+            channel=channel, noise_sigma=RAYLEIGH.noise_sigma, alpha=alpha,
+            n_agents=n, batch_m=m, horizon=RAYLEIGH.horizon,
+            gamma=RAYLEIGH.gamma, n_rounds=n_rounds, debias=True,
+            tag=f"N{n}_M{m}",
+        )
+        for n, m in SETTINGS
+    ]
+
+
 def run(mc_runs: int = 5, n_rounds: int = 250, alpha: float = 1e-3):
     env, pol = LandmarkNav(), MLPPolicy()
-    ota = OTAConfig(
-        channel=make_channel(RAYLEIGH.channel, **dict(RAYLEIGH.channel_kwargs)),
-        noise_sigma=RAYLEIGH.noise_sigma,
-        debias=True,
-    )
+    scens = scenarios(n_rounds, alpha)
+    res = run_sweep(env, pol, scens, mc_runs)
+
     results = {}
-    for n, m in SETTINGS:
-        cfg = RAYLEIGH.fedpg(n_agents=n, batch_m=m, n_rounds=n_rounds)
-        cfg = type(cfg)(**{**cfg.__dict__, "alpha": alpha})
-        t0 = time.perf_counter()
-        rewards, grad_sq = run_setting(env, pol, cfg, ota, mc_runs)
-        dt = (time.perf_counter() - t0) * 1e6
-        results[(n, m)] = (final_reward(rewards), avg_grad_sq(grad_sq))
+    for i, (n, m) in enumerate(SETTINGS):
+        results[(n, m)] = (res.final_reward(i), res.avg_grad_sq(i))
         emit(
-            f"fig12_rayleigh_N{n}_M{m}", dt / mc_runs,
+            f"fig12_rayleigh_N{n}_M{m}", res.scenario_time_us(i),
             f"reward={results[(n, m)][0]:.3f};avg_grad_sq={results[(n, m)][1]:.4f}",
         )
 
@@ -54,4 +63,6 @@ def run(mc_runs: int = 5, n_rounds: int = 250, alpha: float = 1e-3):
         f"ratio={m_effect:.2f};claim=decreases_in_M;"
         f"pass={g[(10,1)] > g[(10,10)]}",
     )
+    emit("fig12_sweep_compiles", 0.0,
+         f"partitions={res.n_partitions};scenarios={len(scens)}")
     return g

@@ -3,39 +3,45 @@ G(PO)MDP — same order of convergence, fewer channel uses.
 
 Communication accounting: vanilla TDMA/FDMA needs N orthogonal channel uses
 per round; OTA needs 1.  We report the reward trajectories' agreement and
-the derived channel-use ratio."""
-from __future__ import annotations
+the derived channel-use ratio.
 
-import time
+Declared as a two-scenario sweep (OTA Rayleigh uplink vs ``channel=None``
+exact uplink) over the scenario-sweep engine."""
+from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.configs.ota_pg_particle import RAYLEIGH
 from repro.core.channel import make_channel
-from repro.core.ota import OTAConfig
+from repro.core.sweep import Scenario
 from repro.rl.env import LandmarkNav
 from repro.rl.policy import MLPPolicy
 
-from benchmarks.common import emit, final_reward, run_setting
+from benchmarks.common import emit, final_reward, run_sweep
+
+
+def scenarios(n_rounds: int, n_agents: int, batch_m: int, alpha: float):
+    base = dict(
+        noise_sigma=RAYLEIGH.noise_sigma, alpha=alpha, n_agents=n_agents,
+        batch_m=batch_m, horizon=RAYLEIGH.horizon, gamma=RAYLEIGH.gamma,
+        n_rounds=n_rounds,
+    )
+    return [
+        Scenario(channel=make_channel("rayleigh"), debias=True, tag="ota",
+                 **base),
+        Scenario(channel=None, tag="vanilla", **base),
+    ]
 
 
 def run(mc_runs: int = 5, n_rounds: int = 250, n_agents: int = 10,
         batch_m: int = 10, alpha: float = 1e-3):
     env, pol = LandmarkNav(), MLPPolicy()
-    cfg = RAYLEIGH.fedpg(n_agents=n_agents, batch_m=batch_m, n_rounds=n_rounds)
-    cfg = type(cfg)(**{**cfg.__dict__, "alpha": alpha})
-    ota = OTAConfig(
-        channel=make_channel("rayleigh"), noise_sigma=RAYLEIGH.noise_sigma,
-        debias=True,
-    )
+    scens = scenarios(n_rounds, n_agents, batch_m, alpha)
+    res = run_sweep(env, pol, scens, mc_runs, seed=1)
 
-    t0 = time.perf_counter()
-    r_ota, g_ota = run_setting(env, pol, cfg, ota, mc_runs, seed=1)
-    dt_ota = (time.perf_counter() - t0) * 1e6
-    t0 = time.perf_counter()
-    r_van, g_van = run_setting(env, pol, cfg, None, mc_runs, seed=1)
-    dt_van = (time.perf_counter() - t0) * 1e6
-
+    i_ota, i_van = res.index(tag="ota"), res.index(tag="vanilla")
+    r_ota = jnp.asarray(res.history.rewards[i_ota])
+    r_van = jnp.asarray(res.history.rewards[i_van])
     f_ota, f_van = final_reward(r_ota), final_reward(r_van)
     # iterations to reach 90% of the vanilla final improvement
     base = float(jnp.mean(r_van[:, :10]))
@@ -48,9 +54,9 @@ def run(mc_runs: int = 5, n_rounds: int = 250, n_agents: int = 10,
         return int(hits[0])
 
     it_ota, it_van = first_hit(mean_ota), first_hit(mean_van)
-    emit("fig3_ota_federated_pg", dt_ota / mc_runs,
+    emit("fig3_ota_federated_pg", res.scenario_time_us(i_ota),
          f"final_reward={f_ota:.3f};iters_to_90pct={it_ota};channel_uses_per_round=1")
-    emit("fig3_vanilla_gpomdp", dt_van / mc_runs,
+    emit("fig3_vanilla_gpomdp", res.scenario_time_us(i_van),
          f"final_reward={f_van:.3f};iters_to_90pct={it_van};channel_uses_per_round={n_agents}")
     same_order = it_ota <= 2 * max(it_van, 1)
     emit(

@@ -1,37 +1,48 @@
 """Paper Figs. 4-5: Nakagami-m (m=0.1, Omega=1; sigma_h^2 = 10 m_h^2)
 degrades convergence relative to Rayleigh, and increasing M is less
-effective (Theorem 2's channel-variance floor)."""
-from __future__ import annotations
+effective (Theorem 2's channel-variance floor).
 
-import time
+Declared as a {Nakagami, Rayleigh} x {M=1, M=10} grid over the
+scenario-sweep engine, plus the direct Lemma-3 aggregation-error floor."""
+from __future__ import annotations
 
 from repro.configs.ota_pg_particle import NAKAGAMI, RAYLEIGH
 from repro.core.channel import make_channel
-from repro.core.ota import OTAConfig
+from repro.core.sweep import Scenario
 from repro.rl.env import LandmarkNav
 from repro.rl.policy import MLPPolicy
 
-from benchmarks.common import avg_grad_sq, emit, final_reward, run_setting
+from benchmarks.common import emit, run_sweep
+
+
+def scenarios(n_rounds: int, n_agents: int, alpha: float = 1e-3):
+    scens = []
+    for setting in (NAKAGAMI, RAYLEIGH):
+        ch = make_channel(setting.channel, **dict(setting.channel_kwargs))
+        for m in (1, 10):
+            scens.append(Scenario(
+                channel=ch, noise_sigma=setting.noise_sigma, alpha=alpha,
+                n_agents=n_agents, batch_m=m, horizon=setting.horizon,
+                gamma=setting.gamma, n_rounds=n_rounds, debias=True,
+                tag=f"{setting.name}_M{m}",
+            ))
+    return scens
 
 
 def run(mc_runs: int = 5, n_rounds: int = 250, n_agents: int = 10):
     env, pol = LandmarkNav(), MLPPolicy()
+    scens = scenarios(n_rounds, n_agents)
+    res = run_sweep(env, pol, scens, mc_runs, seed=2)
+
     out = {}
-    for setting, alpha in ((NAKAGAMI, 1e-3), (RAYLEIGH, 1e-3)):
-        ch = make_channel(setting.channel, **dict(setting.channel_kwargs))
-        ota = OTAConfig(channel=ch, noise_sigma=setting.noise_sigma, debias=True)
-        for m in (1, 10):
-            cfg = setting.fedpg(n_agents=n_agents, batch_m=m, n_rounds=n_rounds)
-            cfg = type(cfg)(**{**cfg.__dict__, "alpha": alpha})
-            t0 = time.perf_counter()
-            rew, gsq = run_setting(env, pol, cfg, ota, mc_runs, seed=2)
-            dt = (time.perf_counter() - t0) * 1e6
-            out[(setting.name, m)] = (final_reward(rew), avg_grad_sq(gsq))
-            emit(
-                f"fig45_{setting.name}_M{m}", dt / mc_runs,
-                f"reward={out[(setting.name, m)][0]:.3f};"
-                f"avg_grad_sq={out[(setting.name, m)][1]:.4f}",
-            )
+    for i, s in enumerate(scens):
+        name, m = s.tag.rsplit("_M", 1)
+        out[(name, int(m))] = (res.final_reward(i), res.avg_grad_sq(i))
+        emit(
+            f"fig45_{s.tag}", res.scenario_time_us(i),
+            f"reward={out[(name, int(m))][0]:.3f};"
+            f"avg_grad_sq={out[(name, int(m))][1]:.4f}",
+        )
 
     nak_worse = out[("nakagami", 10)][0] < out[("rayleigh", 10)][0] + 0.05
     m_gain_ray = out[("rayleigh", 1)][1] / max(out[("rayleigh", 10)][1], 1e-9)

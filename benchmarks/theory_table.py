@@ -1,20 +1,22 @@
 """Theorem 1/2 right-hand sides vs the simulated average squared gradient
-norm on a tabular MDP with computable constants — the bounds must hold."""
+norm on a tabular MDP with computable constants — the bounds must hold.
+
+The two channel settings are declared as a scenario grid on the sweep
+engine (one compiled program per channel family); the bound evaluation is
+a pure post-processing table."""
 from __future__ import annotations
 
 import math
-import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import fedpg, theory
+from repro.core import theory
 from repro.core.channel import NakagamiChannel, RayleighChannel
-from repro.core.ota import OTAConfig
+from repro.core.sweep import Scenario
 from repro.rl.env import TabularMDP
 from repro.rl.policy import TabularSoftmaxPolicy
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_sweep
 
 
 def run(n_rounds: int = 150, mc_runs: int = 3):
@@ -22,37 +24,38 @@ def run(n_rounds: int = 150, mc_runs: int = 3):
                             gamma=0.9, horizon=3)
     pol = TabularSoftmaxPolicy(3, 2)
     consts = theory.MDPConstants(G=math.sqrt(2.0), F=0.5, l_bar=1.0, gamma=0.9)
-    L = consts.smoothness_L()
     V = consts.V()
     delta_j = 1.0 / (1 - 0.9)  # J in [0, l_bar/(1-gamma)]
+    n_agents, batch_m = 8, 4
 
-    for ch, name, thm in (
+    channels = [
         (RayleighChannel(), "rayleigh", 1),
         (NakagamiChannel(m=0.1, omega=1.0), "nakagami", 2),
-    ):
-        alpha = min(1e-2, consts.max_stepsize(ch.mean))
-        n_agents, batch_m = 8, 4
-        cfg = fedpg.FedPGConfig(
+    ]
+    scens = [
+        Scenario(
+            channel=ch, noise_sigma=1e-3,
+            alpha=min(1e-2, consts.max_stepsize(ch.mean)),
             n_agents=n_agents, batch_m=batch_m, horizon=mdp.horizon,
-            gamma=mdp.gamma, alpha=alpha, n_rounds=n_rounds,
+            gamma=mdp.gamma, n_rounds=n_rounds, debias=True, tag=name,
         )
-        ota = OTAConfig(channel=ch, noise_sigma=1e-3, debias=True)
-        t0 = time.perf_counter()
-        hist = fedpg.monte_carlo(mdp, pol, cfg, jax.random.key(1), mc_runs,
-                                 ota=ota)
-        dt = (time.perf_counter() - t0) * 1e6
-        empirical = float(jnp.mean(hist.grad_sq))
+        for ch, name, _ in channels
+    ]
+    res = run_sweep(mdp, pol, scens, mc_runs, seed=1)
+
+    for i, (ch, name, thm) in enumerate(channels):
+        empirical = res.avg_grad_sq(i)
         kw = dict(
-            K=n_rounds, n_agents=n_agents, batch_m=batch_m, alpha=alpha,
-            m_h=ch.mean, sigma_h2=ch.var, noise_sigma2=1e-6, delta_J=delta_j,
-            V=V,
+            K=n_rounds, n_agents=n_agents, batch_m=batch_m,
+            alpha=scens[i].alpha, m_h=ch.mean, sigma_h2=ch.var,
+            noise_sigma2=1e-6, delta_J=delta_j, V=V,
         )
         bound = (theory.theorem1_bound(**kw) if thm == 1
                  else theory.theorem2_bound(**kw))
         emit(
-            f"theory_thm{thm}_{name}", dt / mc_runs,
+            f"theory_thm{thm}_{name}", res.scenario_time_us(i),
             f"empirical={empirical:.4f};bound={bound:.4f};"
-            f"alpha={alpha:.2e};holds={bool(empirical <= bound)}",
+            f"alpha={scens[i].alpha:.2e};holds={bool(empirical <= bound)}",
         )
 
     # Corollary 1 schedule table

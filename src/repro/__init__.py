@@ -1,0 +1,6 @@
+"""Reproduction of "Over-the-air Federated Policy Gradient" (arXiv 2310.16592).
+
+Subpackages: ``core`` (channel/OTA/estimators/theory/fedpg/sweep), ``rl``
+(envs, policies, samplers), ``models``/``train``/``launch`` (the scaled
+trainer substrate), ``kernels`` (Pallas), ``utils``.
+"""

@@ -12,5 +12,10 @@ Public API:
     fedpg     — Algorithm 1 (federated PG) and Algorithm 2 (OTA federated PG)
                 training loops.
     power_control — transmit-power policies (truncated channel inversion).
+    sweep     — batched scenario-sweep engine: a grid of (channel, noise,
+                step-size, N, estimator, power-control) scenarios partitioned
+                by structural shape and run as one jitted program each.
 """
-from repro.core import channel, fedpg, gpomdp, ota, power_control, theory  # noqa: F401
+from repro.core import (  # noqa: F401
+    channel, fedpg, gpomdp, ota, power_control, sweep, theory,
+)

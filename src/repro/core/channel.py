@@ -16,12 +16,14 @@ power control policies that shape p live in ``power_control.py``.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -160,6 +162,96 @@ _REGISTRY = {
     "nakagami": NakagamiChannel,
     "lognormal": LogNormalChannel,
 }
+
+
+# ---------------------------------------------------------------------------
+# Batched adapter: channel parameters as (possibly traced) arrays.
+# ---------------------------------------------------------------------------
+
+def channel_kind(ch: Channel) -> str:
+    """Reverse registry lookup: RayleighChannel() -> 'rayleigh'."""
+    for name, cls in _REGISTRY.items():
+        if type(ch) is cls:
+            return name
+    raise ValueError(f"channel {type(ch).__name__} is not in the registry")
+
+
+def batched_channel_arrays(
+    channels: Sequence[Channel],
+) -> Tuple[str, Dict[str, np.ndarray]]:
+    """Stack a same-kind channel list into per-parameter float64 arrays.
+
+    Returns ``(kind, params)`` where each ``params[name]`` has shape
+    ``(len(channels),)``.  Besides the raw dataclass fields, derived scalars
+    the sampler / theory need are precomputed here in float64 — so a
+    ``BatchedChannel`` lane reproduces the concrete dataclass bit-for-bit
+    instead of re-deriving them in float32 inside the trace:
+
+    * ``_mean`` / ``_var``   — the exact moments (m_h, sigma_h^2);
+    * ``_omega_over_m``      — the Nakagami Gamma scale Omega/m.
+    """
+    kinds = {channel_kind(ch) for ch in channels}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot batch across channel kinds {sorted(kinds)}")
+    kind = kinds.pop()
+    names = [f.name for f in dataclasses.fields(channels[0])]
+    params: Dict[str, np.ndarray] = {
+        name: np.array([float(getattr(ch, name)) for ch in channels], np.float64)
+        for name in names
+    }
+    params["_mean"] = np.array([float(ch.mean) for ch in channels], np.float64)
+    params["_var"] = np.array([float(ch.var) for ch in channels], np.float64)
+    if kind == "nakagami":
+        params["_omega_over_m"] = np.array(
+            [float(ch.omega) / float(ch.m) for ch in channels], np.float64
+        )
+    return kind, params
+
+
+@dataclass(frozen=True)
+class BatchedChannel(Channel):
+    """A channel family whose parameters are (possibly traced) array scalars.
+
+    The scenario-sweep engine vmaps/maps over stacked channel parameters; a
+    lane of that batch sees scalar tracers, which the frozen float-field
+    dataclasses above cannot hold without retracing per value.  This adapter
+    keeps their exact sampling computations (same ops, same PRNG layout, so
+    the draws are bit-identical to the concrete classes at equal parameter
+    values) while accepting traced ``params``.
+
+    ``params`` is the per-lane slice of ``batched_channel_arrays`` output.
+    """
+
+    kind: str = ""
+    params: Any = None  # Mapping[str, jax.Array], each shape ()
+
+    def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+        p = self.params
+        if self.kind == "ideal":
+            return jnp.ones(shape, jnp.float32)
+        if self.kind == "fixed":
+            return jnp.broadcast_to(
+                jnp.asarray(p["gain"], jnp.float32), shape
+            )
+        if self.kind == "rayleigh":
+            z = jax.random.normal(key, shape + (2,), jnp.float32)
+            return p["scale"] * jnp.sqrt(jnp.sum(z * z, axis=-1))
+        if self.kind == "nakagami":
+            return jax.random.gamma(key, p["m"], shape, jnp.float32) * (
+                p["_omega_over_m"]
+            )
+        if self.kind == "lognormal":
+            z = jax.random.normal(key, shape, jnp.float32)
+            return jnp.exp(p["mu"] + p["sigma"] * z)
+        raise ValueError(f"unknown batched channel kind {self.kind!r}")
+
+    @property
+    def mean(self):  # traced m_h
+        return self.params["_mean"]
+
+    @property
+    def var(self):  # traced sigma_h^2
+        return self.params["_var"]
 
 
 def make_channel(name: str, **kwargs) -> Channel:

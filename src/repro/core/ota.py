@@ -28,32 +28,54 @@ paper's faithful update uses ``debias=False``.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.channel import Channel, IdealChannel
+from repro.core.power_control import PowerPolicy
 from repro.utils.tree import tree_normal_like
 
 PyTree = Any
+Scalar = Union[float, jax.Array]  # python literal, or traced in a sweep lane
+
+
+def _noise_enabled(sigma: Scalar) -> bool:
+    """Whether to emit the AWGN ops.  Python literals keep the exact
+    pre-existing behaviour (skip when 0); arrays/tracers always emit them
+    (a runtime sigma of 0 then adds exact zeros)."""
+    if isinstance(sigma, (int, float)):
+        return sigma > 0.0
+    return True
 
 
 @dataclass(frozen=True)
 class OTAConfig:
-    """Static configuration of the over-the-air uplink."""
+    """Static configuration of the over-the-air uplink.
+
+    ``noise_sigma`` may be a traced scalar (the sweep engine batches noise
+    levels); ``power_control`` optionally shapes the transmit power so the
+    effective gain becomes ``h = c * p(c)``; ``update_scale`` overrides the
+    full server normalisation ``1 / (N * norm_const)`` — the sweep engine
+    precomputes it in float64 per scenario so that batched lanes multiply by
+    exactly the constant the unbatched program would have folded in.
+    """
 
     channel: Channel
-    noise_sigma: float = 0.0  # sigma of the AWGN on the *sum* (Eq. 6)
-    debias: bool = False      # divide by m_h (unbiased grad estimate)
+    noise_sigma: Scalar = 0.0  # sigma of the AWGN on the *sum* (Eq. 6)
+    debias: bool = False       # divide by m_h (unbiased grad estimate)
+    power_control: Optional[PowerPolicy] = None
+    update_scale: Optional[Scalar] = None
 
     @property
-    def norm_const(self) -> float:
+    def norm_const(self) -> Scalar:
         return self.channel.mean if self.debias else 1.0
 
     def ideal(self) -> "OTAConfig":
         """The matching noiseless/distortionless config (Algorithm 1)."""
-        return replace(self, channel=IdealChannel(), noise_sigma=0.0)
+        return replace(self, channel=IdealChannel(), noise_sigma=0.0,
+                       power_control=None, update_scale=None)
 
 
 # ---------------------------------------------------------------------------
@@ -61,8 +83,15 @@ class OTAConfig:
 # ---------------------------------------------------------------------------
 
 def sample_gains(cfg: OTAConfig, key: jax.Array, n_agents: int) -> jax.Array:
-    """Draw h_{i,k} for every agent for one round: shape (n_agents,)."""
-    return cfg.channel.sample(key, (n_agents,))
+    """Draw h_{i,k} for every agent for one round: shape (n_agents,).
+
+    With power control, the effective gain is ``h = c * p(c)`` (Eq. 6's
+    gain-times-power factorisation).
+    """
+    c = cfg.channel.sample(key, (n_agents,))
+    if cfg.power_control is not None:
+        c = c * cfg.power_control.apply(c)
+    return c
 
 
 def aggregate_stacked(
@@ -86,10 +115,12 @@ def aggregate_stacked(
         return jnp.sum(hb * g, axis=0)
 
     v = jax.tree.map(_combine, grads_stacked)
-    if cfg.noise_sigma > 0.0:
+    if _noise_enabled(cfg.noise_sigma):
         noise = tree_normal_like(key_n, v, cfg.noise_sigma)
         v = jax.tree.map(jnp.add, v, noise)
-    scale = 1.0 / (leading * cfg.norm_const)
+    scale = cfg.update_scale
+    if scale is None:
+        scale = 1.0 / (leading * cfg.norm_const)
     return jax.tree.map(lambda x: x * scale, v), h
 
 
@@ -113,7 +144,10 @@ def local_gain(cfg: OTAConfig, key: jax.Array, axis_names: Sequence[str]) -> jax
     for name in reversed(tuple(axis_names)):
         idx = idx + jax.lax.axis_index(name) * stride
         stride = stride * jax.lax.axis_size(name)
-    return cfg.channel.sample(jax.random.fold_in(key, idx), ())
+    c = cfg.channel.sample(jax.random.fold_in(key, idx), ())
+    if cfg.power_control is not None:
+        c = c * cfg.power_control.apply(c)
+    return c
 
 
 def psum_aggregate(
@@ -135,14 +169,16 @@ def psum_aggregate(
     h = local_gain(cfg, key_h, axis_names)
     scaled = jax.tree.map(lambda g: g * h.astype(g.dtype), local_grad)
     v = jax.lax.psum(scaled, axis_names)
-    if cfg.noise_sigma > 0.0:
+    if _noise_enabled(cfg.noise_sigma):
         # Same key on every shard => identical noise everywhere, i.e. the
         # server's single n_k draw without any broadcast collective.
         noise = tree_normal_like(key_n, v, cfg.noise_sigma)
         v = jax.tree.map(jnp.add, v, noise)
-    for name in axis_names:
-        n_agents = n_agents * jax.lax.axis_size(name)
-    scale = 1.0 / (n_agents * cfg.norm_const)
+    scale = cfg.update_scale
+    if scale is None:
+        for name in axis_names:
+            n_agents = n_agents * jax.lax.axis_size(name)
+        scale = 1.0 / (n_agents * cfg.norm_const)
     return jax.tree.map(lambda x: x * scale, v)
 
 
@@ -174,12 +210,18 @@ def add_awgn(
     """Apply the server-side AWGN and normalisation to a weighted-loss grad.
 
     ``grad`` must already equal ``(1/N) sum_i h_i g_i`` (from the weighted
-    loss); this adds ``n_k / N`` and optionally debiases by ``m_h``.
+    loss); this adds ``n_k / N`` and optionally debiases by ``m_h``.  An
+    ``update_scale`` override (``1 / (N * c)`` over the raw sum) is honoured
+    here as the equivalent ``N * update_scale`` factor, keeping the three
+    aggregation forms interchangeable for sweep-built configs.
     """
-    if cfg.noise_sigma > 0.0:
+    if _noise_enabled(cfg.noise_sigma):
         noise = tree_normal_like(key, grad, cfg.noise_sigma / n_agents)
         grad = jax.tree.map(jnp.add, grad, noise)
-    if cfg.debias:
+    if cfg.update_scale is not None:
+        scale = n_agents * cfg.update_scale
+        grad = jax.tree.map(lambda x: x * scale, grad)
+    elif cfg.debias:
         inv = 1.0 / cfg.norm_const
         grad = jax.tree.map(lambda x: x * inv, grad)
     return grad

@@ -1,0 +1,477 @@
+"""Batched scenario-sweep engine: the paper's figure grids as ONE program.
+
+The paper's results (Figs. 1-5) — and the wider channel/power-control grids
+of the related over-the-air FL literature — are grids of scenarios:
+``(channel params, noise_sigma, alpha, n_agents, estimator, power control)``.
+Running each grid point through its own ``fedpg.monte_carlo`` call re-traces
+and re-compiles a fresh XLA program per point, so a benchmark suite spends
+most of its wall time inside the compiler.
+
+This module expresses the grid declaratively and compiles **one program per
+structural partition**:
+
+* **structural axes** change the trace shape or graph and force a partition
+  split: ``n_agents``, ``batch_m``, ``horizon``, ``n_rounds``, ``gamma``,
+  ``estimator``, ``debias``, the channel *family*, the power-control policy
+  *type*, noise on/off, and exact-vs-OTA uplink;
+* **continuous axes** (channel parameters, ``noise_sigma``, ``alpha``,
+  power-control parameters) batch inside a single jitted program — mapped
+  over scenarios, ``vmap``-ed over Monte-Carlo seeds — reusing the existing
+  ``fedpg.run`` round body unchanged.
+
+Exactness contract: a continuous axis that does **not** vary inside a
+partition is closed over as the same Python-float literal the per-scenario
+path uses, so those lanes are **bit-identical** to ``fedpg.monte_carlo``
+under the same PRNG keys (XLA folds literals; re-materialising them as
+runtime values can move a multiply and drift the last mantissa bit).  Axes
+that do vary are fed as traced scalars via ``BatchedChannel`` /
+``OTAConfig.update_scale``, whose float64-precomputed derived constants keep
+the channel draws and updates bit-identical as well; the only exception is
+the debias normaliser when the channel parameters themselves vary within a
+partition, where ``grad_sq`` may differ in the final bit (documented in
+``Scenario.debias``).
+
+Typical use::
+
+    scenarios = grid(
+        channel=[RayleighChannel(), NakagamiChannel(m=0.1, omega=1.0)],
+        noise_sigma=[1e-3, 1e-2],
+        alpha=[1e-3, 1e-4],
+        n_agents=10, batch_m=10, n_rounds=200, debias=True,
+    )
+    result = sweep(env, policy, scenarios, jax.random.key(0), mc_runs=20)
+    print(result.to_csv())
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import itertools
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedpg
+from repro.core.channel import (
+    BatchedChannel, Channel, batched_channel_arrays, channel_kind,
+)
+from repro.core.fedpg import FedPGConfig, History
+from repro.core.ota import OTAConfig
+from repro.core.power_control import PowerPolicy
+
+# Modes for laying scenarios into the partition program.  ``vmap`` (default)
+# batches lanes into one vectorised computation — fastest, and bit-identical
+# to ``monte_carlo`` whenever the debias normaliser is partition-constant.
+# ``map`` runs the lanes through ``lax.map`` (sequential inside one program);
+# every lane keeps the exact rank of the unbatched path, which is the
+# conservative choice if a platform's batched reductions ever reassociate.
+MODES = ("map", "vmap")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One grid point: everything a single ``monte_carlo`` call would need.
+
+    ``channel=None`` selects the exact Algorithm-1 uplink (``ota=None``).
+    ``debias`` divides the update by the *raw* channel mean ``m_h`` — the
+    same ``OTAConfig.norm_const`` convention the per-scenario path uses,
+    also under power control.
+    """
+
+    channel: Optional[Channel] = None
+    noise_sigma: float = 0.0
+    alpha: float = 1e-3
+    n_agents: int = 10
+    batch_m: int = 10
+    horizon: int = 20
+    gamma: float = 0.99
+    n_rounds: int = 200
+    estimator: str = "gpomdp"
+    power_control: Optional[PowerPolicy] = None
+    debias: bool = False
+    tag: str = ""  # free-form label carried into tables/CSV
+
+    def fedpg_config(self) -> FedPGConfig:
+        return FedPGConfig(
+            n_agents=self.n_agents, batch_m=self.batch_m, horizon=self.horizon,
+            gamma=self.gamma, alpha=self.alpha, n_rounds=self.n_rounds,
+            estimator=self.estimator,
+        )
+
+    def ota_config(self) -> Optional[OTAConfig]:
+        """The equivalent per-scenario OTAConfig (None for exact uplink)."""
+        if self.channel is None:
+            return None
+        return OTAConfig(
+            channel=self.channel, noise_sigma=self.noise_sigma,
+            debias=self.debias, power_control=self.power_control,
+        )
+
+    def describe(self) -> Dict[str, Any]:
+        """Flat, CSV-friendly view of the scenario."""
+        chan = "exact" if self.channel is None else _channel_tag(self.channel)
+        chan_params = "" if self.channel is None else ";".join(
+            f"{f.name}={_fmt_param(getattr(self.channel, f.name))}"
+            for f in dataclasses.fields(self.channel)
+        )
+        pc = "" if self.power_control is None else type(self.power_control).__name__
+        return {
+            "tag": self.tag, "channel": chan, "channel_params": chan_params,
+            "noise_sigma": self.noise_sigma, "alpha": self.alpha,
+            "n_agents": self.n_agents, "batch_m": self.batch_m,
+            "horizon": self.horizon, "gamma": self.gamma,
+            "n_rounds": self.n_rounds, "estimator": self.estimator,
+            "power_control": pc, "debias": self.debias,
+        }
+
+
+def _fmt_param(v: Any) -> str:
+    """Compact field rendering for describe(): numbers as %g, nested
+    channel/policy objects (e.g. ControlledChannel.base) as their type."""
+    if isinstance(v, (int, float)):
+        return f"{v:g}"
+    if dataclasses.is_dataclass(v):
+        return type(v).__name__
+    return str(v)
+
+
+def grid(**axes) -> List[Scenario]:
+    """Cartesian product of scenario axes.
+
+    Each keyword is a ``Scenario`` field; a list/tuple value is an axis, a
+    scalar is a fixed setting.  Axis order follows keyword order, last axis
+    fastest — matching nested for-loops over the same lists.
+    """
+    valid = {f.name for f in dataclasses.fields(Scenario)}
+    unknown = set(axes) - valid
+    if unknown:
+        raise ValueError(f"unknown scenario axes {sorted(unknown)}; "
+                         f"choose from {sorted(valid)}")
+    names = list(axes)
+    values = [v if isinstance(v, (list, tuple)) else [v] for v in axes.values()]
+    return [Scenario(**dict(zip(names, combo)))
+            for combo in itertools.product(*values)]
+
+
+# ---------------------------------------------------------------------------
+# Partitioning by structural shape.
+# ---------------------------------------------------------------------------
+
+def _channel_tag(ch: Channel) -> str:
+    """Registry kind when available, else the concrete type name (custom
+    channels outside the registry still sweep fine as long as they don't
+    vary within a partition)."""
+    try:
+        return channel_kind(ch)
+    except ValueError:
+        return type(ch).__name__
+
+
+def _structure_key(s: Scenario) -> Tuple:
+    """Everything that changes the trace shape or the computation graph."""
+    if s.channel is None:
+        # exact uplink: the OTA-only axes don't reach the program — zero
+        # them so equivalent exact scenarios share one partition/compile.
+        return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
+                s.estimator, False, None, None, False)
+    pc = None if s.power_control is None else type(s.power_control).__name__
+    return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
+            s.estimator, s.debias, _channel_tag(s.channel), pc,
+            s.noise_sigma > 0.0)
+
+
+@dataclass
+class Partition:
+    """A structurally-uniform slice of the grid, compiled as one program."""
+
+    indices: List[int]           # positions in the original scenario list
+    scenarios: List[Scenario]
+    key: Tuple = ()
+    wall_time_us: float = 0.0    # compile + execute, filled in by sweep()
+
+    @property
+    def proto(self) -> Scenario:
+        return self.scenarios[0]
+
+    def varying(self, name: str) -> bool:
+        vals = {getattr(s, name) for s in self.scenarios}
+        return len(vals) > 1
+
+
+def partition_scenarios(scenarios: Sequence[Scenario]) -> List[Partition]:
+    groups: Dict[Tuple, Partition] = {}
+    for i, s in enumerate(scenarios):
+        k = _structure_key(s)
+        part = groups.setdefault(k, Partition(indices=[], scenarios=[], key=k))
+        part.indices.append(i)
+        part.scenarios.append(s)
+    return list(groups.values())
+
+
+def _norm_const64(s: Scenario) -> float:
+    """The per-scenario debias normaliser, in float64 (OTAConfig semantics)."""
+    return float(s.channel.mean) if s.debias else 1.0
+
+
+def _pack_partition(part: Partition) -> Dict[str, Any]:
+    """Stack the axes that actually vary inside this partition.
+
+    Returns a dict of (S,)-shaped float32 arrays (dtypes match what the
+    unbatched path would have produced after weak-type promotion); constant
+    axes are deliberately left out so the lane builder closes over the same
+    Python literals the per-scenario program uses.
+    """
+    packed: Dict[str, Any] = {}
+
+    def f32(vals64):
+        return jnp.asarray(np.asarray(vals64, np.float64), jnp.float32)
+
+    if part.varying("alpha"):
+        packed["alpha"] = f32([s.alpha for s in part.scenarios])
+    if part.proto.channel is not None:
+        if part.varying("noise_sigma"):
+            packed["noise_sigma"] = f32([s.noise_sigma for s in part.scenarios])
+        if part.varying("channel"):
+            kind, arrays = batched_channel_arrays(
+                [s.channel for s in part.scenarios])
+            packed["channel"] = {k: f32(v) for k, v in arrays.items()}
+            if part.proto.debias:
+                packed["update_scale"] = f32([
+                    1.0 / (s.n_agents * _norm_const64(s))
+                    for s in part.scenarios
+                ])
+        if part.proto.power_control is not None and part.varying("power_control"):
+            fields = dataclasses.fields(part.proto.power_control)
+            packed["power_control"] = {
+                f.name: f32([float(getattr(s.power_control, f.name))
+                             for s in part.scenarios])
+                for f in fields
+            }
+    return packed
+
+
+def _make_lane(env, policy, part: Partition):
+    """Build lane(packed_slice, keys) -> History(stacked over mc_runs).
+
+    ``packed_slice`` holds only the *varying* axes (scalar tracers inside
+    the partition program); everything constant is closed over exactly as
+    the per-scenario path would.  ``keys`` stays a runtime argument — just
+    like ``monte_carlo`` passes it — so XLA cannot constant-fold the PRNG
+    chain differently than the unbatched program.
+    """
+    proto = part.proto
+    base_cfg = proto.fedpg_config()
+    # Registry kind, only needed when channel params vary (BatchedChannel);
+    # constant non-registry channels are closed over like any other.
+    chan_kind = (channel_kind(proto.channel)
+                 if proto.channel is not None and part.varying("channel")
+                 else None)
+    pc_type = None if proto.power_control is None else type(proto.power_control)
+
+    def lane(packed: Dict[str, Any], keys: jax.Array) -> History:
+        cfg = base_cfg
+        if "alpha" in packed:
+            cfg = replace(cfg, alpha=packed["alpha"])
+        if proto.channel is None:
+            ota = None
+        else:
+            if "channel" in packed:
+                channel: Channel = BatchedChannel(
+                    kind=chan_kind, params=packed["channel"])
+                update_scale = packed.get("update_scale")
+            else:
+                channel = proto.channel
+                update_scale = None
+            if pc_type is None:
+                pc = None
+            elif "power_control" in packed:
+                pc = pc_type(**packed["power_control"])
+            else:
+                pc = proto.power_control
+            ota = OTAConfig(
+                channel=channel,
+                noise_sigma=packed.get("noise_sigma", proto.noise_sigma),
+                debias=proto.debias,
+                power_control=pc,
+                update_scale=update_scale,
+            )
+        return jax.vmap(
+            lambda k: fedpg.run(env, policy, cfg, k, ota=ota)[1]
+        )(keys)
+
+    return lane
+
+
+# ---------------------------------------------------------------------------
+# Results.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SweepResult:
+    """Histories for every scenario, plus grid/partition bookkeeping.
+
+    ``history`` leaves have shape ``(n_scenarios, mc_runs, n_rounds)`` in
+    the original scenario order (a 1-D object array of ``(mc_runs, K_i)``
+    arrays when the grid varies ``n_rounds``).
+    """
+
+    scenarios: List[Scenario]
+    history: History
+    partitions: List[Partition] = field(default_factory=list)
+    mc_runs: int = 0
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.partitions)
+
+    def scenario_time_us(self, i: int) -> float:
+        """Per-(scenario, MC run) share of the owning partition's wall time
+        (compile + execute) — structurally different scenarios keep
+        distinguishable timings."""
+        for part in self.partitions:
+            if i in part.indices:
+                return part.wall_time_us / (len(part.indices)
+                                            * max(self.mc_runs, 1))
+        raise IndexError(f"scenario {i} not in any partition")
+
+    @property
+    def n_compiles(self) -> int:
+        """Compiled partition programs: one jit per structural shape."""
+        return len(self.partitions)
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def scenario_history(self, i: int) -> History:
+        return History(*(np.asarray(x[i]) for x in self.history))
+
+    def final_reward(self, i: int, tail: int = 20) -> float:
+        # jnp reductions, matching benchmarks.common exactly.
+        return float(jnp.mean(jnp.asarray(self.history.rewards[i])[:, -tail:]))
+
+    def avg_grad_sq(self, i: int) -> float:
+        """(1/K) sum_k ||grad J||^2, averaged over MC runs (Fig. 2/5)."""
+        return float(jnp.mean(jnp.asarray(self.history.grad_sq[i])))
+
+    def index(self, **fields) -> int:
+        """Position of the first scenario matching all given field values."""
+        for i, s in enumerate(self.scenarios):
+            if all(getattr(s, k) == v for k, v in fields.items()):
+                return i
+        raise KeyError(f"no scenario matches {fields}")
+
+    def to_dicts(self, tail: int = 20) -> List[Dict[str, Any]]:
+        rows = []
+        for i, s in enumerate(self.scenarios):
+            row = {"index": i, **s.describe()}
+            row["final_reward"] = self.final_reward(i, tail)
+            row["avg_grad_sq"] = self.avg_grad_sq(i)
+            row["mean_gain"] = float(np.mean(np.asarray(self.history.gain_mean[i])))
+            rows.append(row)
+        return rows
+
+    def to_csv(self, path: Optional[str] = None, tail: int = 20) -> str:
+        rows = self.to_dicts(tail)
+        buf = io.StringIO()
+        cols = list(rows[0]) if rows else []
+        buf.write(",".join(cols) + "\n")
+        for row in rows:
+            buf.write(",".join(_csv_cell(row[c]) for c in cols) + "\n")
+        text = buf.getvalue()
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+
+def _csv_cell(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    s = str(v)
+    if any(c in s for c in ',"\n\r'):  # RFC-4180 quoting
+        return '"' + s.replace('"', '""') + '"'
+    return s
+
+
+def _stack_histories(arrs: List[np.ndarray]) -> np.ndarray:
+    """Stack per-scenario arrays; ragged round counts (``n_rounds`` is a
+    structural axis) fall back to a 1-D object array so ``history.x[i]``
+    indexing keeps working."""
+    if len({a.shape for a in arrs}) == 1:
+        return np.stack(arrs)
+    out = np.empty(len(arrs), dtype=object)
+    for i, a in enumerate(arrs):
+        out[i] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+def sweep(
+    env,
+    policy,
+    scenarios: Sequence[Scenario],
+    key: jax.Array,
+    mc_runs: int,
+    *,
+    mode: str = "vmap",
+) -> SweepResult:
+    """Run every scenario x mc_runs, one compiled program per partition.
+
+    All scenarios share the same Monte-Carlo key set ``split(key, mc_runs)``
+    — exactly what per-scenario ``fedpg.monte_carlo(..., key, mc_runs)``
+    calls would use, so results are directly comparable across scenarios
+    and against the unbatched path.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("empty scenario list")
+    keys = jax.random.split(key, mc_runs)
+    parts = partition_scenarios(scenarios)
+
+    out_rewards: List[Optional[np.ndarray]] = [None] * len(scenarios)
+    out_grad_sq: List[Optional[np.ndarray]] = [None] * len(scenarios)
+    out_gain: List[Optional[np.ndarray]] = [None] * len(scenarios)
+
+    for part in parts:
+        packed = _pack_partition(part)
+        lane = _make_lane(env, policy, part)
+        n = len(part.scenarios)
+        t0 = time.perf_counter()
+        if not packed:
+            # Every scenario in the partition is identical: run one lane and
+            # replicate its history.
+            hist = jax.jit(lane)({}, keys)
+            hists = [hist] * n
+        elif mode == "vmap":
+            stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(packed, keys)
+            hists = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                     for i in range(n)]
+        else:
+            stacked = jax.jit(
+                lambda pk, ks: jax.lax.map(lambda p: lane(p, ks), pk)
+            )(packed, keys)
+            hists = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                     for i in range(n)]
+        jax.block_until_ready(hists)
+        part.wall_time_us = (time.perf_counter() - t0) * 1e6
+        for idx, h in zip(part.indices, hists):
+            out_rewards[idx] = np.asarray(h.rewards)
+            out_grad_sq[idx] = np.asarray(h.grad_sq)
+            out_gain[idx] = np.asarray(h.gain_mean)
+
+    history = History(
+        rewards=_stack_histories(out_rewards),
+        grad_sq=_stack_histories(out_grad_sq),
+        gain_mean=_stack_histories(out_gain),
+    )
+    return SweepResult(scenarios=scenarios, history=history, partitions=parts,
+                       mc_runs=mc_runs)

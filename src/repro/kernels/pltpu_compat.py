@@ -1,0 +1,8 @@
+"""Pallas-TPU version compatibility helpers shared by the kernel modules.
+
+jax<0.5 ships the TPU compiler-params class as ``TPUCompilerParams``; newer
+releases renamed it to ``CompilerParams``.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -1,0 +1,33 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+``@given(...)`` marks the test skipped (property tests need the real
+library); ``@settings`` is a no-op; ``st.<anything>(...)`` returns an inert
+placeholder (only ever passed to the skipped ``given``).  Plain unit tests
+in the same module keep running on a bare interpreter.
+"""
+import pytest
+
+
+def given(*args, **kwargs):
+    del args, kwargs
+
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    del args, kwargs
+    return lambda fn: fn
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        def _strategy(*args, **kwargs):
+            return None
+
+        return _strategy
+
+
+st = _Strategies()

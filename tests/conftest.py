@@ -1,30 +1,55 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device; only launch/dryrun.py forces 512 host devices (in its own
-process)."""
+process).
+
+Marker policy: ``slow`` and ``bench`` tests are deselected by default via
+``addopts = -m 'not slow and not bench'`` in pyproject.toml (the tier-1
+gate).  Run the full suite with ``pytest -m ""``.
+"""
 import jax
 import pytest
+
+# ---------------------------------------------------------------------------
+# XLA compilation counting (used by the sweep-engine tests to prove the
+# batched path compiles strictly fewer programs than the per-scenario loop).
+# The listener must be registered once per process; jax.monitoring offers no
+# unregister, so the fixture toggles an "active" flag instead.
+# ---------------------------------------------------------------------------
+
+_COMPILE_COUNTER = {"active": False, "count": 0}
+
+
+def _on_event_duration(event: str, *args, **kwargs) -> None:
+    if _COMPILE_COUNTER["active"] and event == "/jax/core/compile/backend_compile_duration":
+        _COMPILE_COUNTER["count"] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
+
+
+class CompileCounter:
+    """Context manager counting XLA backend compilations while active."""
+
+    def __init__(self):
+        self.count = 0
+
+    def __enter__(self):
+        _COMPILE_COUNTER["count"] = 0
+        _COMPILE_COUNTER["active"] = True
+        return self
+
+    def __exit__(self, *exc):
+        _COMPILE_COUNTER["active"] = False
+        self.count = _COMPILE_COUNTER["count"]
+        return False
+
+
+@pytest.fixture
+def compile_counter():
+    """Factory fixture: ``with compile_counter() as c: ...; c.count``."""
+    return CompileCounter
 
 
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
-
-
-def pytest_addoption(parser):
-    parser.addoption(
-        "--run-slow", action="store_true", default=False,
-        help="run slow tests (subprocess dry-runs, long statistics)",
-    )
-
-
-def pytest_collection_modifyitems(config, items):
-    if config.getoption("--run-slow"):
-        return
-    skip = pytest.mark.skip(reason="needs --run-slow")
-    for item in items:
-        if "slow" in item.keywords:
-            item.add_marker(skip)
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test")

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import ota
 from repro.core.channel import FixedGainChannel, IdealChannel, RayleighChannel
@@ -37,7 +40,8 @@ def test_fixed_gain_debias_recovers_mean(key):
     u, _ = ota.aggregate_stacked(cfg, jax.random.key(1), g)
     exact = ota.exact_aggregate(g)
     for a, b in zip(jax.tree.leaves(u), jax.tree.leaves(exact)):
-        np.testing.assert_allclose(a, b, rtol=1e-5)
+        # identity holds to float32 round-off; atol covers near-zero elements
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
 
 
 def test_unbiasedness_under_rayleigh(key):

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs.base import InputShape

@@ -5,7 +5,10 @@ import math
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import ota, theory
 from repro.core.channel import NakagamiChannel, RayleighChannel

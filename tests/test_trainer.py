@@ -64,6 +64,7 @@ def test_microbatch_equivalence(small):
     assert rel < 1e-4, rel
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     """With vocab >> the pipeline's active sub-vocab, the support-learning
     phase gives a fast, unambiguous loss drop under OTA aggregation."""
