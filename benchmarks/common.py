@@ -7,13 +7,14 @@ from typing import Callable, List
 import jax
 import jax.numpy as jnp
 
-ROWS: List[str] = []
+# structured (name, us_per_call, derived) records; formatted only at print
+# time so consumers (e.g. the --json export) never re-parse CSV strings
+ROWS: List[tuple] = []
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    row = f"{name},{us_per_call:.1f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:

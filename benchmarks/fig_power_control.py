@@ -1,0 +1,111 @@
+"""Beyond-figure grid: transmit-power control as a first-class sweep axis.
+
+The paper's Theorems 1/2 are stated in terms of the effective-gain pair
+(m_h, sigma_h^2); the OTA-FL literature (Cao et al., Fan et al.) shows the
+transmit-power policy is the main lever on that pair.  This suite sweeps a
+policy grid over the Rayleigh base channel on a tabular MDP with computable
+constants and emits, per scenario:
+
+* the simulated average squared gradient norm (the paper's Fig. 2/5 metric),
+* the tightest applicable Theorem-1/2 bound evaluated with the *effective*
+  moments, and
+* the K -> inf variance floor — the "power control moves the
+  channel-variance floor" story in one table: inversion policies shrink
+  sigma_h^2/m_h^2 and with it the floor; phase-aware constant-received
+  power kills the channel term entirely.
+
+Policy-parameter lanes (the TruncatedInversion target axis) batch into one
+compiled program via the sweep engine's ControlledChannel packing.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.core import theory
+from repro.core.channel import RayleighChannel
+from repro.core.power_control import (
+    ConstantReceived, FullInversion, HeterogeneousBudget, TruncatedInversion,
+    make_controlled_channel,
+)
+from repro.core.sweep import Scenario
+from repro.rl.env import TabularMDP
+from repro.rl.policy import TabularSoftmaxPolicy
+
+from benchmarks.common import emit, run_sweep
+
+N_AGENTS, BATCH_M = 8, 4
+
+
+def _policies():
+    """(tag, policy-or-None) grid; None = no power control (h = c)."""
+    return [
+        ("unit", None),
+        ("trunc_inv_t0.8", TruncatedInversion(target=0.8)),
+        ("trunc_inv_t1.0", TruncatedInversion(target=1.0)),
+        ("trunc_inv_t1.2", TruncatedInversion(target=1.2)),
+        ("full_inv", FullInversion(target=1.0)),
+        ("const_recv", ConstantReceived(target=1.0)),
+        ("hetero_budget", HeterogeneousBudget(p_min=0.5, p_max=1.5)),
+    ]
+
+
+def scenarios(n_rounds: int, mdp, consts):
+    base = RayleighChannel()
+    out = []
+    for tag, pol in _policies():
+        ch = base if pol is None else make_controlled_channel(
+            base, pol, n_agents=N_AGENTS)
+        alpha = min(1e-2, consts.max_stepsize(float(ch.mean)))
+        out.append(Scenario(
+            channel=ch, noise_sigma=1e-3, alpha=alpha, n_agents=N_AGENTS,
+            batch_m=BATCH_M, horizon=mdp.horizon, gamma=mdp.gamma,
+            n_rounds=n_rounds, debias=True, tag=tag,
+        ))
+    return out
+
+
+def run(n_rounds: int = 120, mc_runs: int = 3):
+    mdp = TabularMDP.random(jax.random.key(0), n_states=3, n_actions=2,
+                            gamma=0.9, horizon=3)
+    pol = TabularSoftmaxPolicy(3, 2)
+    consts = theory.MDPConstants(G=math.sqrt(2.0), F=0.5, l_bar=1.0, gamma=0.9)
+    V = consts.V()
+    delta_j = 1.0 / (1 - 0.9)
+
+    scens = scenarios(n_rounds, mdp, consts)
+    res = run_sweep(mdp, pol, scens, mc_runs, seed=1)
+
+    floors = {}
+    for i, s in enumerate(scens):
+        m_h, v_h = s.effective_moments()
+        which, bound = theory.applicable_bound(
+            K=n_rounds, n_agents=N_AGENTS, batch_m=BATCH_M, alpha=s.alpha,
+            m_h=m_h, sigma_h2=v_h, noise_sigma2=1e-6, delta_J=delta_j, V=V,
+        )
+        floor = (theory.theorem1_floor if which == "theorem1"
+                 else theory.theorem2_floor)(
+            n_agents=N_AGENTS, batch_m=BATCH_M, m_h=m_h, sigma_h2=v_h,
+            noise_sigma2=1e-6, V=V,
+        )
+        floors[s.tag] = floor
+        empirical = res.avg_grad_sq(i)
+        emit(
+            f"fig_pc_{s.tag}", res.scenario_time_us(i),
+            f"avg_grad_sq={empirical:.4f};bound={bound:.4f};which={which};"
+            f"m_h_eff={m_h:.4f};sigma_h2_eff={v_h:.5f};floor={floor:.5f};"
+            f"holds={bool(empirical <= bound)}",
+        )
+
+    # the story: channel inversion shrinks the variance floor, exact
+    # phase-aware inversion (sigma_h^2 = 0) leaves only the noise term
+    emit(
+        "fig_pc_floor_moves", 0.0,
+        f"unit={floors['unit']:.5f};trunc={floors['trunc_inv_t1.0']:.5f};"
+        f"const={floors['const_recv']:.6f};"
+        f"pass={bool(floors['const_recv'] < floors['trunc_inv_t1.0'] < floors['unit'])}",
+    )
+    emit("fig_pc_sweep_compiles", 0.0,
+         f"partitions={res.n_partitions};scenarios={len(scens)}")
+    return floors

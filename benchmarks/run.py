@@ -1,20 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+writes them as a JSON list (the CI bench-smoke artifact, so the perf
+trajectory is recorded per run).
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig12,...]
+                                            [--json BENCH_smoke.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks import (  # noqa: E402
-    et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami, microbench,
-    roofline_table, theory_table,
+    et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
+    fig_power_control, microbench, roofline_table, theory_table,
 )
-from benchmarks.common import emit
+from benchmarks.common import ROWS, emit
 
 SUITES = {
     "fig12": lambda quick: fig12_rayleigh.run(
@@ -25,6 +29,8 @@ SUITES = {
         mc_runs=2 if quick else 5, n_rounds=120 if quick else 250),
     "theory": lambda quick: theory_table.run(
         n_rounds=80 if quick else 150, mc_runs=2 if quick else 3),
+    "power": lambda quick: fig_power_control.run(
+        n_rounds=80 if quick else 120, mc_runs=2 if quick else 3),
     "et": lambda quick: et_baseline.run(n_rounds=100 if quick else 200),
     "micro": lambda quick: microbench.run(),
     "roofline": lambda quick: roofline_table.run(),
@@ -36,6 +42,8 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--json", default="",
+                    help="also write the result rows as JSON to this path")
     args = ap.parse_args()
 
     names = [n for n in args.only.split(",") if n] or list(SUITES)
@@ -49,6 +57,12 @@ def main() -> int:
             failures.append(name)
             emit(f"{name}_FAILED", 0.0, f"error={type(e).__name__}:{e}")
     emit("total_wall", (time.time() - t0) * 1e6, f"suites={len(names)}")
+    if args.json:
+        records = [{"name": name, "us_per_call": us, "derived": derived}
+                   for name, us, derived in ROWS]
+        with open(args.json, "w") as f:
+            json.dump({"suites": names, "failures": failures,
+                       "rows": records}, f, indent=1)
     return 1 if failures else 0
 
 

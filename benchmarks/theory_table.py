@@ -12,6 +12,7 @@ import jax
 
 from repro.core import theory
 from repro.core.channel import NakagamiChannel, RayleighChannel
+from repro.core.power_control import TruncatedInversion, make_controlled_channel
 from repro.core.sweep import Scenario
 from repro.rl.env import TabularMDP
 from repro.rl.policy import TabularSoftmaxPolicy
@@ -31,6 +32,10 @@ def run(n_rounds: int = 150, mc_runs: int = 3):
     channels = [
         (RayleighChannel(), "rayleigh", 1),
         (NakagamiChannel(m=0.1, omega=1.0), "nakagami", 2),
+        # power-controlled effective gain: the bound is evaluated with the
+        # *effective* (m_h, sigma_h^2) the ControlledChannel carries
+        (make_controlled_channel(RayleighChannel(), TruncatedInversion()),
+         "rayleigh_trunc_inv", 1),
     ]
     scens = [
         Scenario(

@@ -10,11 +10,25 @@ Public API:
     theory    — smoothness constant L, bound constant V, Theorem 1/2 right-
                 hand sides and Corollary 1 complexity calculators.
     fedpg     — Algorithm 1 (federated PG) and Algorithm 2 (OTA federated PG)
-                training loops.
-    power_control — transmit-power policies (truncated channel inversion).
+                training loops; run_jit/monte_carlo cache their compiled
+                programs keyed on (env, policy, cfg, ota, n_runs).
+    power_control — transmit-power policies shaping the effective gain
+                h = c * p(c): UnitPower, TruncatedInversion, FullInversion,
+                ConstantReceived (phase-aware exact inversion), and
+                HeterogeneousBudget (per-agent power budgets).  The
+                effective-gain channel ControlledChannel is a first-class
+                registry family ('controlled'); build it with
+                make_controlled_channel, which fills the (m_h, sigma_h^2)
+                moments — closed form for the inversion policies over
+                Rayleigh (incomplete-gamma expressions), mixture moments for
+                heterogeneous budgets, Monte Carlo fallback otherwise.
+                Non-finite moments are rejected at OTAConfig/pack time.
     sweep     — batched scenario-sweep engine: a grid of (channel, noise,
                 step-size, N, estimator, power-control) scenarios partitioned
                 by structural shape and run as one jitted program each.
+                Power-control policy *type* is structural; its parameters
+                (and ControlledChannel parameters) batch in-program, with
+                per-lane debias normalisation from the *effective* moments.
 """
 from repro.core import (  # noqa: F401
     channel, fedpg, gpomdp, ota, power_control, sweep, theory,

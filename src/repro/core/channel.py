@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,7 +155,7 @@ class LogNormalChannel(Channel):
         return (math.exp(self.sigma**2) - 1.0) * math.exp(2 * self.mu + self.sigma**2)
 
 
-_REGISTRY = {
+_REGISTRY: Dict[str, type] = {
     "ideal": IdealChannel,
     "fixed": FixedGainChannel,
     "rayleigh": RayleighChannel,
@@ -163,16 +163,52 @@ _REGISTRY = {
     "lognormal": LogNormalChannel,
 }
 
+# Extension hooks for channel families whose parameters are not a flat tuple
+# of floats (e.g. power-controlled effective-gain channels, whose dataclass
+# nests a base channel and a policy).  Keyed by the *root* of the kind tag
+# (the part before the first ':'):
+#   packer(channels)                 -> Dict[str, np.ndarray]  (float64)
+#   sampler(kind, params, key, shape)-> jax.Array
+_BATCHED_PACKERS: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {}
+_BATCHED_SAMPLERS: Dict[str, Callable[..., jax.Array]] = {}
+
+
+def register_channel(
+    name: str,
+    cls: type,
+    *,
+    packer: Callable[..., Dict[str, np.ndarray]] | None = None,
+    sampler: Callable[..., jax.Array] | None = None,
+) -> None:
+    """Add a channel family to the registry (and the batched-sweep engine).
+
+    ``packer``/``sampler`` are only needed when the dataclass fields are not
+    all plain floats; a class may also define ``kind_tag()`` returning a
+    refined structural tag (``'<name>:<...>'``) so that structurally
+    incompatible members of the family land in separate sweep partitions.
+    """
+    _REGISTRY[name] = cls
+    if packer is not None:
+        _BATCHED_PACKERS[name] = packer
+    if sampler is not None:
+        _BATCHED_SAMPLERS[name] = sampler
+
 
 # ---------------------------------------------------------------------------
 # Batched adapter: channel parameters as (possibly traced) arrays.
 # ---------------------------------------------------------------------------
 
 def channel_kind(ch: Channel) -> str:
-    """Reverse registry lookup: RayleighChannel() -> 'rayleigh'."""
+    """Reverse registry lookup: RayleighChannel() -> 'rayleigh'.
+
+    Registered classes may refine their tag via ``kind_tag()`` (e.g.
+    ``ControlledChannel`` -> ``'controlled:rayleigh:TruncatedInversion'``) so
+    partitioning distinguishes structurally different members of one family.
+    """
     for name, cls in _REGISTRY.items():
         if type(ch) is cls:
-            return name
+            tag = getattr(ch, "kind_tag", None)
+            return tag() if callable(tag) else name
     raise ValueError(f"channel {type(ch).__name__} is not in the registry")
 
 
@@ -189,21 +225,36 @@ def batched_channel_arrays(
 
     * ``_mean`` / ``_var``   — the exact moments (m_h, sigma_h^2);
     * ``_omega_over_m``      — the Nakagami Gamma scale Omega/m.
+
+    Families with nested parameters (registered with a ``packer``) stack
+    through their hook; for them the returned kind is the full composite tag.
     """
     kinds = {channel_kind(ch) for ch in channels}
     if len(kinds) != 1:
         raise ValueError(f"cannot batch across channel kinds {sorted(kinds)}")
     kind = kinds.pop()
-    names = [f.name for f in dataclasses.fields(channels[0])]
-    params: Dict[str, np.ndarray] = {
-        name: np.array([float(getattr(ch, name)) for ch in channels], np.float64)
-        for name in names
-    }
+    root = kind.split(":", 1)[0]
+    if root in _BATCHED_PACKERS:
+        params = _BATCHED_PACKERS[root](channels)
+    else:
+        names = [f.name for f in dataclasses.fields(channels[0])]
+        params = {
+            name: np.array([float(getattr(ch, name)) for ch in channels],
+                           np.float64)
+            for name in names
+        }
+        if kind == "nakagami":
+            params["_omega_over_m"] = np.array(
+                [float(ch.omega) / float(ch.m) for ch in channels], np.float64
+            )
     params["_mean"] = np.array([float(ch.mean) for ch in channels], np.float64)
     params["_var"] = np.array([float(ch.var) for ch in channels], np.float64)
-    if kind == "nakagami":
-        params["_omega_over_m"] = np.array(
-            [float(ch.omega) / float(ch.m) for ch in channels], np.float64
+    if not (np.isfinite(params["_mean"]).all()
+            and np.isfinite(params["_var"]).all()):
+        raise ValueError(
+            f"channel kind {kind!r} has non-finite (m_h, sigma_h^2) moments; "
+            "power-controlled channels must be built with "
+            "make_controlled_channel so their effective moments are known"
         )
     return kind, params
 
@@ -227,6 +278,9 @@ class BatchedChannel(Channel):
 
     def sample(self, key: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
         p = self.params
+        root = self.kind.split(":", 1)[0]
+        if root in _BATCHED_SAMPLERS:
+            return _BATCHED_SAMPLERS[root](self.kind, p, key, shape)
         if self.kind == "ideal":
             return jnp.ones(shape, jnp.float32)
         if self.kind == "fixed":

@@ -16,14 +16,16 @@ motivation and what `benchmarks/et_baseline.py` measures.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import gpomdp
-from repro.core.fedpg import FedPGConfig
+from repro.core.fedpg import (
+    FedPGConfig, _estimator_grad, _hashable, register_compiled_cache,
+)
 from repro.rl.sampler import empirical_reward, rollout_batch
 from repro.utils.tree import (
     tree_global_norm_sq, tree_sub, tree_zeros_like,
@@ -47,6 +49,8 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
     """K rounds of event-triggered federated PG. Returns (theta, ETHistory)."""
     key_init, key_scan = jax.random.split(key)
     theta = policy.init(key_init)
+    # honour cfg.estimator exactly like fedpg.make_round_fn does
+    grad_fn = _estimator_grad(cfg)
     stale0 = jax.vmap(lambda _: tree_zeros_like(theta))(
         jnp.arange(cfg.n_agents)
     )
@@ -58,7 +62,7 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
         def agent_grad(k):
             traj = rollout_batch(env, policy, theta, k, cfg.horizon,
                                  cfg.batch_m)
-            return gpomdp.gpomdp_gradient(policy, theta, traj, cfg.gamma), traj
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
 
         grads, trajs = jax.vmap(agent_grad)(agent_keys)
 
@@ -91,5 +95,17 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
                             uploads=ups.astype(jnp.float32))
 
 
+@functools.lru_cache(maxsize=64)
+def _compiled_run(env, policy, cfg: FedPGConfig, et: ETConfig):
+    return jax.jit(lambda k: run(env, policy, cfg, et, k))
+
+
+register_compiled_cache(_compiled_run)
+
+
 def run_jit(env, policy, cfg: FedPGConfig, et: ETConfig, key):
+    """Compiled entry point; reuses the program across calls with the same
+    (hashable) ``(env, policy, cfg, et)``, like ``fedpg.run_jit``."""
+    if _hashable(env, policy, cfg, et):
+        return _compiled_run(env, policy, cfg, et)(key)
     return jax.jit(lambda k: run(env, policy, cfg, et, k))(key)

@@ -15,6 +15,7 @@ Per-round metrics (the paper's Figs. 1-5):
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional
 
@@ -115,8 +116,64 @@ def run(
     return theta, History(rewards=rewards, grad_sq=grad_sq, gain_mean=gain_mean)
 
 
+# ---------------------------------------------------------------------------
+# Compiled-callable cache.  ``jax.jit`` caches per function object, so
+# wrapping a fresh lambda on every run_jit/monte_carlo call used to recompile
+# the whole training program from scratch each time.  The jitted closures are
+# instead cached on the (hashable) argument tuple; configs with traced or
+# otherwise unhashable fields fall back to a fresh closure.
+# ---------------------------------------------------------------------------
+
+# Bounded: each entry pins its compiled executable (and the captured
+# env/policy) alive, so an unbounded cache would leak across a long
+# hand-rolled parameter grid that bypasses the sweep engine.
+_CACHE_SIZE = 64
+
+
+@functools.lru_cache(maxsize=_CACHE_SIZE)
+def _compiled_run(env, policy, cfg: FedPGConfig, ota):
+    return jax.jit(lambda k: run(env, policy, cfg, k, ota=ota))
+
+
+@functools.lru_cache(maxsize=_CACHE_SIZE)
+def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota, n_runs: int):
+    return jax.jit(jax.vmap(lambda k: run(env, policy, cfg, k, ota=ota)[1]))
+
+
+# every compiled-program cache in the package; other modules (e.g.
+# event_triggered) register theirs so one reset call clears them all
+_COMPILED_CACHES = [_compiled_run, _compiled_monte_carlo]
+
+
+def register_compiled_cache(cache) -> None:
+    _COMPILED_CACHES.append(cache)
+
+
+def clear_compilation_cache() -> None:
+    """Drop every cached compiled program (mainly for tests) — including
+    caches other modules registered via ``register_compiled_cache``."""
+    for cache in _COMPILED_CACHES:
+        cache.cache_clear()
+
+
+def _hashable(*objs) -> bool:
+    try:
+        hash(objs)
+        return True
+    except TypeError:
+        return False
+
+
 def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None):
-    """jit-compiled entry point (env/policy/cfgs are closure constants)."""
+    """jit-compiled entry point (env/policy/cfgs are closure constants).
+
+    Repeated calls with the same ``(env, policy, cfg, ota)`` reuse the
+    compiled program (``theta0`` is a pytree and cannot key a cache, so
+    passing one compiles fresh).  Caching needs every argument hashable:
+    envs holding jax arrays (e.g. ``TabularMDP``) take the uncached path.
+    """
+    if theta0 is None and _hashable(env, policy, cfg, ota):
+        return _compiled_run(env, policy, cfg, ota)(key)
     fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0))
     return fn(key)
 
@@ -129,7 +186,15 @@ def avg_grad_sq(history: History) -> jax.Array:
 def monte_carlo(
     env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None
 ):
-    """n_runs independent repetitions (the paper uses 20): vmapped."""
+    """n_runs independent repetitions (the paper uses 20): vmapped.
+
+    Repeated calls with the same ``(env, policy, cfg, ota, n_runs)`` reuse
+    the compiled program; only the PRNG keys change between calls.  Caching
+    needs every argument hashable: envs holding jax arrays (e.g.
+    ``TabularMDP``) take the uncached path.
+    """
     keys = jax.random.split(key, n_runs)
+    if _hashable(env, policy, cfg, ota):
+        return _compiled_monte_carlo(env, policy, cfg, ota, n_runs)(keys)
     fn = jax.jit(jax.vmap(lambda k: run(env, policy, cfg, k, ota=ota)[1]))
     return fn(keys)

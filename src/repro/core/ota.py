@@ -27,6 +27,7 @@ paper's faithful update uses ``debias=False``.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 from typing import Any, Optional, Sequence, Tuple, Union
 
@@ -34,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.channel import Channel, IdealChannel
-from repro.core.power_control import PowerPolicy
+from repro.core.power_control import PowerPolicy, effective_moments
 from repro.utils.tree import tree_normal_like
 
 PyTree = Any
@@ -56,10 +57,13 @@ class OTAConfig:
 
     ``noise_sigma`` may be a traced scalar (the sweep engine batches noise
     levels); ``power_control`` optionally shapes the transmit power so the
-    effective gain becomes ``h = c * p(c)``; ``update_scale`` overrides the
-    full server normalisation ``1 / (N * norm_const)`` — the sweep engine
-    precomputes it in float64 per scenario so that batched lanes multiply by
-    exactly the constant the unbatched program would have folded in.
+    effective gain becomes ``h = c * p(c)`` — with ``debias=True`` the
+    update is then divided by the *effective* mean ``E[c p(c)]`` (see
+    ``norm_const_for``), keeping the estimator unbiased under power
+    control; ``update_scale`` overrides the full server normalisation
+    ``1 / (N * norm_const)`` — the sweep engine precomputes it in float64
+    per scenario so that batched lanes multiply by exactly the constant the
+    unbatched program would have folded in.
     """
 
     channel: Channel
@@ -68,9 +72,52 @@ class OTAConfig:
     power_control: Optional[PowerPolicy] = None
     update_scale: Optional[Scalar] = None
 
+    def __post_init__(self):
+        # Fail at config-build time, not rounds later: a debiased update
+        # divides by m_h, and a NaN mean (a ControlledChannel whose moments
+        # were never estimated) would silently corrupt every update.
+        if self.debias and self.update_scale is None:
+            m = self.channel.mean
+            if isinstance(m, (int, float)) and not math.isfinite(m):
+                raise ValueError(
+                    f"debias=True needs a finite channel mean, got m_h={m!r}; "
+                    "build power-controlled channels with "
+                    "make_controlled_channel so their effective moments are "
+                    "estimated"
+                )
+
     @property
     def norm_const(self) -> Scalar:
-        return self.channel.mean if self.debias else 1.0
+        """The raw-channel debias normaliser m_h (no power control folded
+        in); the aggregation forms use :meth:`norm_const_for`, which
+        accounts for ``power_control``."""
+        if not self.debias:
+            return 1.0
+        m = self.channel.mean
+        if isinstance(m, (int, float)) and not math.isfinite(m):
+            raise ValueError(
+                f"non-finite debias normaliser m_h={m!r}; build "
+                "power-controlled channels with make_controlled_channel"
+            )
+        return m
+
+    def norm_const_for(self, n_agents: Optional[int] = None) -> Scalar:
+        """The debias normaliser the aggregation forms divide by: the
+        *effective* gain mean E[c p(c)] when ``power_control`` is set
+        (closed form or cached Monte Carlo — identical to what
+        ``Scenario.ota_config`` folds into ``update_scale``), the channel
+        mean otherwise.  ``n_agents`` is needed by per-agent policies."""
+        if not self.debias or self.power_control is None:
+            return self.norm_const
+        try:
+            return effective_moments(self.channel, self.power_control,
+                                     n_agents=n_agents)[0]
+        except TypeError as e:  # traced/unhashable channel or policy params
+            raise ValueError(
+                "debias needs hashable channel and power-control parameters "
+                "to derive the effective mean; traced configs must carry an "
+                "explicit update_scale (the sweep engine packs one per lane)"
+            ) from e
 
     def ideal(self) -> "OTAConfig":
         """The matching noiseless/distortionless config (Algorithm 1)."""
@@ -120,7 +167,7 @@ def aggregate_stacked(
         v = jax.tree.map(jnp.add, v, noise)
     scale = cfg.update_scale
     if scale is None:
-        scale = 1.0 / (leading * cfg.norm_const)
+        scale = 1.0 / (leading * cfg.norm_const_for(leading))
     return jax.tree.map(lambda x: x * scale, v), h
 
 
@@ -146,7 +193,8 @@ def local_gain(cfg: OTAConfig, key: jax.Array, axis_names: Sequence[str]) -> jax
         stride = stride * jax.lax.axis_size(name)
     c = cfg.channel.sample(jax.random.fold_in(key, idx), ())
     if cfg.power_control is not None:
-        c = c * cfg.power_control.apply(c)
+        # per-agent policies key the budget on this shard's agent index
+        c = c * cfg.power_control.apply_indexed(c, idx, stride)
     return c
 
 
@@ -178,7 +226,7 @@ def psum_aggregate(
     if scale is None:
         for name in axis_names:
             n_agents = n_agents * jax.lax.axis_size(name)
-        scale = 1.0 / (n_agents * cfg.norm_const)
+        scale = 1.0 / (n_agents * cfg.norm_const_for(n_agents))
     return jax.tree.map(lambda x: x * scale, v)
 
 
@@ -222,6 +270,6 @@ def add_awgn(
         scale = n_agents * cfg.update_scale
         grad = jax.tree.map(lambda x: x * scale, grad)
     elif cfg.debias:
-        inv = 1.0 / cfg.norm_const
+        inv = 1.0 / cfg.norm_const_for(n_agents)
         grad = jax.tree.map(lambda x: x * inv, grad)
     return grad

@@ -27,8 +27,9 @@ runtime values can move a multiply and drift the last mantissa bit).  Axes
 that do vary are fed as traced scalars via ``BatchedChannel`` /
 ``OTAConfig.update_scale``, whose float64-precomputed derived constants keep
 the channel draws and updates bit-identical as well; the only exception is
-the debias normaliser when the channel parameters themselves vary within a
-partition, where ``grad_sq`` may differ in the final bit (documented in
+the debias normaliser when the axes it depends on — channel parameters, or
+power-control parameters (effective moments) — vary within a partition,
+where ``grad_sq`` may differ in the final bit (documented in
 ``Scenario.debias``).
 
 Typical use::
@@ -61,7 +62,9 @@ from repro.core.channel import (
 )
 from repro.core.fedpg import FedPGConfig, History
 from repro.core.ota import OTAConfig
-from repro.core.power_control import PowerPolicy
+from repro.core.power_control import (
+    PowerPolicy, check_agent_count, effective_moments,
+)
 
 # Modes for laying scenarios into the partition program.  ``vmap`` (default)
 # batches lanes into one vectorised computation — fastest, and bit-identical
@@ -77,9 +80,12 @@ class Scenario:
     """One grid point: everything a single ``monte_carlo`` call would need.
 
     ``channel=None`` selects the exact Algorithm-1 uplink (``ota=None``).
-    ``debias`` divides the update by the *raw* channel mean ``m_h`` — the
-    same ``OTAConfig.norm_const`` convention the per-scenario path uses,
-    also under power control.
+    ``debias`` divides the update by the *effective* gain mean ``m_h``: the
+    channel mean when ``power_control`` is None (the plain ``OTAConfig``
+    convention), and the effective-gain mean ``E[c p(c)]`` — closed form
+    where known, deterministic Monte Carlo otherwise — when a policy is set
+    (threaded through ``OTAConfig.update_scale`` in float64, so batched
+    lanes and the per-scenario path fold in the identical constant).
     """
 
     channel: Optional[Channel] = None
@@ -102,13 +108,31 @@ class Scenario:
             estimator=self.estimator,
         )
 
+    def effective_moments(self) -> Tuple[float, float]:
+        """The effective-gain (m_h, sigma_h^2) this scenario realises —
+        including power control — in float64.  This is the pair the
+        Theorem-1/2 bounds must be evaluated with."""
+        if self.channel is None:
+            return 1.0, 0.0
+        check_agent_count(self.channel, self.n_agents)
+        if self.power_control is None:
+            return float(self.channel.mean), float(self.channel.var)
+        return effective_moments(self.channel, self.power_control,
+                                 n_agents=self.n_agents)
+
     def ota_config(self) -> Optional[OTAConfig]:
         """The equivalent per-scenario OTAConfig (None for exact uplink)."""
         if self.channel is None:
             return None
+        check_agent_count(self.channel, self.n_agents)
+        update_scale = None
+        if self.debias and self.power_control is not None:
+            m_eff, _ = self.effective_moments()
+            update_scale = 1.0 / (self.n_agents * m_eff)
         return OTAConfig(
             channel=self.channel, noise_sigma=self.noise_sigma,
             debias=self.debias, power_control=self.power_control,
+            update_scale=update_scale,
         )
 
     def describe(self) -> Dict[str, Any]:
@@ -119,13 +143,19 @@ class Scenario:
             for f in dataclasses.fields(self.channel)
         )
         pc = "" if self.power_control is None else type(self.power_control).__name__
+        pc_params = "" if self.power_control is None else ";".join(
+            f"{f.name}={_fmt_param(getattr(self.power_control, f.name))}"
+            for f in dataclasses.fields(self.power_control)
+        )
+        m_eff, v_eff = self.effective_moments()
         return {
             "tag": self.tag, "channel": chan, "channel_params": chan_params,
             "noise_sigma": self.noise_sigma, "alpha": self.alpha,
             "n_agents": self.n_agents, "batch_m": self.batch_m,
             "horizon": self.horizon, "gamma": self.gamma,
             "n_rounds": self.n_rounds, "estimator": self.estimator,
-            "power_control": pc, "debias": self.debias,
+            "power_control": pc, "power_control_params": pc_params,
+            "debias": self.debias, "m_h_eff": m_eff, "sigma_h2_eff": v_eff,
         }
 
 
@@ -213,8 +243,12 @@ def partition_scenarios(scenarios: Sequence[Scenario]) -> List[Partition]:
 
 
 def _norm_const64(s: Scenario) -> float:
-    """The per-scenario debias normaliser, in float64 (OTAConfig semantics)."""
-    return float(s.channel.mean) if s.debias else 1.0
+    """The per-scenario debias normaliser, in float64: the *effective* gain
+    mean under power control, the raw channel mean otherwise (matching
+    ``Scenario.ota_config``)."""
+    if not s.debias:
+        return 1.0
+    return s.effective_moments()[0]
 
 
 def _pack_partition(part: Partition) -> Dict[str, Any]:
@@ -239,11 +273,6 @@ def _pack_partition(part: Partition) -> Dict[str, Any]:
             kind, arrays = batched_channel_arrays(
                 [s.channel for s in part.scenarios])
             packed["channel"] = {k: f32(v) for k, v in arrays.items()}
-            if part.proto.debias:
-                packed["update_scale"] = f32([
-                    1.0 / (s.n_agents * _norm_const64(s))
-                    for s in part.scenarios
-                ])
         if part.proto.power_control is not None and part.varying("power_control"):
             fields = dataclasses.fields(part.proto.power_control)
             packed["power_control"] = {
@@ -251,6 +280,14 @@ def _pack_partition(part: Partition) -> Dict[str, Any]:
                              for s in part.scenarios])
                 for f in fields
             }
+        # the debias normaliser follows whichever axis moves the effective
+        # moments — channel params or power-control params
+        if part.proto.debias and (part.varying("channel")
+                                  or "power_control" in packed):
+            packed["update_scale"] = f32([
+                1.0 / (s.n_agents * _norm_const64(s))
+                for s in part.scenarios
+            ])
     return packed
 
 
@@ -265,6 +302,10 @@ def _make_lane(env, policy, part: Partition):
     """
     proto = part.proto
     base_cfg = proto.fedpg_config()
+    # The per-scenario OTAConfig of the prototype: every constant axis —
+    # including a power-control-derived update_scale literal — is closed
+    # over exactly as the unbatched path would fold it in.
+    proto_ota = proto.ota_config()
     # Registry kind, only needed when channel params vary (BatchedChannel);
     # constant non-registry channels are closed over like any other.
     chan_kind = (channel_kind(proto.channel)
@@ -276,29 +317,18 @@ def _make_lane(env, policy, part: Partition):
         cfg = base_cfg
         if "alpha" in packed:
             cfg = replace(cfg, alpha=packed["alpha"])
-        if proto.channel is None:
-            ota = None
-        else:
+        ota = proto_ota
+        if ota is not None:
             if "channel" in packed:
                 channel: Channel = BatchedChannel(
                     kind=chan_kind, params=packed["channel"])
-                update_scale = packed.get("update_scale")
-            else:
-                channel = proto.channel
-                update_scale = None
-            if pc_type is None:
-                pc = None
-            elif "power_control" in packed:
-                pc = pc_type(**packed["power_control"])
-            else:
-                pc = proto.power_control
-            ota = OTAConfig(
-                channel=channel,
-                noise_sigma=packed.get("noise_sigma", proto.noise_sigma),
-                debias=proto.debias,
-                power_control=pc,
-                update_scale=update_scale,
-            )
+                ota = replace(ota, channel=channel)
+            if "noise_sigma" in packed:
+                ota = replace(ota, noise_sigma=packed["noise_sigma"])
+            if "power_control" in packed:
+                ota = replace(ota, power_control=pc_type(**packed["power_control"]))
+            if "update_scale" in packed:
+                ota = replace(ota, update_scale=packed["update_scale"])
         return jax.vmap(
             lambda k: fedpg.run(env, policy, cfg, k, ota=ota)[1]
         )(keys)

@@ -12,11 +12,17 @@ tests can evaluate the theory against the simulated algorithm:
               Lambda = M (N+1) m_h^2 - (M-1) sigma_h^2.
 * Theorem 2 — unconditional bound (Eq. 11) with the O(1/N) channel floor.
 * Corollary 1 — communication/sampling complexity schedules.
+* ``theorem1_floor``/``theorem2_floor``/``applicable_bound`` — the K -> inf
+  variance floors and the tightest-applicable-bound dispatcher; evaluate
+  them with a channel's *effective* (m_h, sigma_h^2) (power control folded
+  in, see ``power_control.effective_moments``) to read off how a transmit
+  power policy moves the channel-variance floor.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -123,6 +129,71 @@ def theorem2_bound(
         + sigma_h2 * V**2 / denom
         + m * m_h**2 * noise_sigma2 / (n * denom)
     )
+
+
+def theorem1_floor(
+    *,
+    n_agents: int,
+    batch_m: int,
+    m_h: float,
+    sigma_h2: float,
+    noise_sigma2: float,
+    V: float,
+) -> float:
+    """Theorem 1's K -> inf limit: the variance floor no round count can
+    beat.  This is the quantity transmit-power control moves — it is
+    monotone in ``sigma_h2 / m_h^2``, the normalised channel variance."""
+    lam = Lambda(n_agents, batch_m, m_h, sigma_h2)
+    if lam <= 0:
+        return math.inf
+    return (
+        batch_m * m_h**2 * noise_sigma2 / (n_agents * lam)
+        + sigma_h2 * V**2 / lam
+    )
+
+
+def theorem2_floor(
+    *,
+    n_agents: int,
+    batch_m: int,
+    m_h: float,
+    sigma_h2: float,
+    noise_sigma2: float,
+    V: float,
+) -> float:
+    """Theorem 2's K -> inf limit (Remark 3's O(1/N) channel floor)."""
+    n, m = n_agents, batch_m
+    denom = m * (n + 1) * m_h**2 + sigma_h2
+    return (
+        m * sigma_h2 * V**2 / denom
+        + sigma_h2 * V**2 / denom
+        + m * m_h**2 * noise_sigma2 / (n * denom)
+    )
+
+
+def applicable_bound(
+    *,
+    K: int,
+    n_agents: int,
+    batch_m: int,
+    alpha: float,
+    m_h: float,
+    sigma_h2: float,
+    noise_sigma2: float,
+    delta_J: float,
+    V: float,
+) -> Tuple[str, float]:
+    """The tightest applicable bound for a channel's *effective*
+    (m_h, sigma_h^2): Theorem 1 when its channel condition (Eq. 10's
+    premise) holds, Theorem 2 otherwise.  Returns (which, value)."""
+    kw = dict(K=K, n_agents=n_agents, batch_m=batch_m, alpha=alpha, m_h=m_h,
+              sigma_h2=sigma_h2, noise_sigma2=noise_sigma2, delta_J=delta_J,
+              V=V)
+    if channel_condition_ok(n_agents, m_h, sigma_h2):
+        b = theorem1_bound(**kw)
+        if math.isfinite(b):
+            return "theorem1", b
+    return "theorem2", theorem2_bound(**kw)
 
 
 @dataclass(frozen=True)

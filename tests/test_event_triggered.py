@@ -1,0 +1,73 @@
+"""Event-triggered baseline: estimator routing regression (it used to
+hardcode G(PO)MDP and silently ignore ``FedPGConfig.estimator``) and basic
+upload accounting."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import event_triggered, fedpg
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+
+SMALL = dict(n_agents=3, batch_m=2, horizon=6, n_rounds=4, alpha=1e-3)
+
+
+@pytest.fixture(scope="module")
+def env_pol():
+    return LandmarkNav(), MLPPolicy()
+
+
+def test_estimator_is_honoured(env_pol):
+    """estimator='reinforce' must change the gradients (regression: the ET
+    loop used to call gpomdp_gradient unconditionally)."""
+    env, pol = env_pol
+    cfg_g = fedpg.FedPGConfig(estimator="gpomdp", **SMALL)
+    cfg_r = replace(cfg_g, estimator="reinforce")
+    et = event_triggered.ETConfig(tau=0.0)  # always upload: pure estimator diff
+    _, h_g = event_triggered.run_jit(env, pol, cfg_g, et, jax.random.key(0))
+    _, h_r = event_triggered.run_jit(env, pol, cfg_r, et, jax.random.key(0))
+    # same PRNG stream, same trajectories — only the estimator differs
+    np.testing.assert_array_equal(np.asarray(h_g.rewards[:1]),
+                                  np.asarray(h_r.rewards[:1]))
+    assert not np.array_equal(np.asarray(h_g.grad_sq), np.asarray(h_r.grad_sq))
+
+
+def test_unknown_estimator_raises(env_pol):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(estimator="nope", **SMALL)
+    with pytest.raises(ValueError, match="unknown estimator"):
+        event_triggered.run(env, pol, cfg, event_triggered.ETConfig(),
+                            jax.random.key(0))
+
+
+def test_run_jit_reuses_compiled(env_pol, compile_counter):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    et = event_triggered.ETConfig(tau=0.05)
+    keys = [jax.random.key(i) for i in range(2)]  # warm eager key helpers
+    fedpg.clear_compilation_cache()  # clears the registered ET cache too
+    with compile_counter() as c1:
+        event_triggered.run_jit(env, pol, cfg, et, keys[0])
+    with compile_counter() as c2:
+        event_triggered.run_jit(env, pol, cfg, et, keys[1])
+    assert c1.count >= 1 and c2.count == 0, (c1.count, c2.count)
+
+
+def test_upload_accounting_bounds(env_pol):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    # tau=0: every agent triggers every round (diff >= 0 always holds)
+    _, h = event_triggered.run_jit(env, pol, cfg,
+                                   event_triggered.ETConfig(tau=0.0),
+                                   jax.random.key(1))
+    np.testing.assert_array_equal(np.asarray(h.uploads),
+                                  np.full(SMALL["n_rounds"],
+                                          SMALL["n_agents"], np.float32))
+    # huge tau: after the first (zero-stale) round nobody triggers
+    _, h2 = event_triggered.run_jit(env, pol, cfg,
+                                    event_triggered.ETConfig(tau=1e9),
+                                    jax.random.key(1))
+    assert float(jnp.max(h2.uploads[1:])) == 0.0

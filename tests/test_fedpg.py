@@ -69,6 +69,34 @@ def test_monte_carlo_vmaps(env_pol):
     assert bool(jnp.all(jnp.isfinite(hist.rewards)))
 
 
+def test_run_jit_and_monte_carlo_reuse_compiled(env_pol, compile_counter):
+    """Repeated run_jit/monte_carlo calls with identical (env, policy, cfg,
+    ota, n_runs) must reuse the compiled program instead of re-tracing a
+    fresh jit closure every call."""
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=2, batch_m=2, n_rounds=3, horizon=4)
+    ota = OTAConfig(channel=make_channel("rayleigh"), noise_sigma=1e-3,
+                    debias=True)
+    keys = [jax.random.key(i) for i in range(4)]  # warm eager key helpers
+    fedpg.clear_compilation_cache()
+
+    with compile_counter() as c1:
+        fedpg.monte_carlo(env, pol, cfg, keys[0], 2, ota=ota)
+    with compile_counter() as c2:
+        fedpg.monte_carlo(env, pol, cfg, keys[1], 2, ota=ota)
+    assert c1.count >= 1 and c2.count == 0, (c1.count, c2.count)
+
+    with compile_counter() as c3:
+        fedpg.run_jit(env, pol, cfg, keys[2], ota=ota)
+    with compile_counter() as c4:
+        fedpg.run_jit(env, pol, cfg, keys[3], ota=ota)
+    assert c3.count >= 1 and c4.count == 0, (c3.count, c4.count)
+
+    # a different n_runs is a different program, not a stale cache hit
+    hist = fedpg.monte_carlo(env, pol, cfg, keys[0], 3, ota=ota)
+    assert hist.rewards.shape == (3, 3)
+
+
 def test_gain_mean_reflects_channel(env_pol):
     env, pol = env_pol
     cfg = fedpg.FedPGConfig(n_agents=16, batch_m=1, n_rounds=20, alpha=0.0)
