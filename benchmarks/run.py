@@ -16,7 +16,7 @@ import time
 
 from benchmarks import (  # noqa: E402
     et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
-    fig_power_control, microbench, roofline_table, theory_table,
+    fig_env_zoo, fig_power_control, microbench, roofline_table, theory_table,
 )
 from benchmarks.common import ROWS, emit
 
@@ -32,6 +32,8 @@ SUITES = {
     "power": lambda quick: fig_power_control.run(
         n_rounds=80 if quick else 120, mc_runs=2 if quick else 3),
     "et": lambda quick: et_baseline.run(n_rounds=100 if quick else 200),
+    "envs": lambda quick: fig_env_zoo.run(
+        n_rounds=40 if quick else 120, mc_runs=2 if quick else 3),
     "micro": lambda quick: microbench.run(),
     "roofline": lambda quick: roofline_table.run(),
 }

@@ -23,13 +23,27 @@ Public API:
                 Rayleigh (incomplete-gamma expressions), mixture moments for
                 heterogeneous budgets, Monte Carlo fallback otherwise.
                 Non-finite moments are rejected at OTAConfig/pack time.
-    sweep     — batched scenario-sweep engine: a grid of (channel, noise,
-                step-size, N, estimator, power-control) scenarios partitioned
-                by structural shape and run as one jitted program each.
-                Power-control policy *type* is structural; its parameters
-                (and ControlledChannel parameters) batch in-program, with
-                per-lane debias normalisation from the *effective* moments.
+    sweep     — batched scenario-sweep engine: a grid of (env, channel,
+                noise, step-size, N, estimator, power-control) scenarios
+                partitioned by structural shape and run as one jitted
+                program each.  Power-control policy *type* is structural;
+                its parameters (and ControlledChannel parameters) batch
+                in-program, with per-lane debias normalisation from the
+                *effective* moments.  The environment is a first-class axis
+                too: the env *family* (registry kind tag from
+                repro.rl.envs) is structural, continuous env parameters
+                (wind, slip, Garnet P/l/rho tables) batch as lanes through
+                the registry packer/builder hooks, and HeterogeneousEnv
+                fleets give each federated agent its own dynamics inside
+                one program (fedpg/event_triggered vmap the per-agent
+                stacks).
+    theory    — also: env_l_bar/constants_for_env derive the Assumption-1
+                loss envelope from the env at the *actual* horizon
+                (l_bar_for), so bound tables track the configured T.
+
+The environment zoo itself (LandmarkNav variants, CliffWalk, LQR, Garnet
+tabular MDPs, HeterogeneousEnv, register_env) lives in ``repro.rl.envs``.
 """
 from repro.core import (  # noqa: F401
-    channel, fedpg, gpomdp, ota, power_control, sweep, theory,
+    channel, event_triggered, fedpg, gpomdp, ota, power_control, sweep, theory,
 )

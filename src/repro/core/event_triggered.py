@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.fedpg import (
     FedPGConfig, _estimator_grad, _hashable, register_compiled_cache,
 )
+from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import empirical_reward, rollout_batch
 from repro.utils.tree import (
     tree_global_norm_sq, tree_sub, tree_zeros_like,
@@ -51,6 +52,10 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
     theta = policy.init(key_init)
     # honour cfg.estimator exactly like fedpg.make_round_fn does
     grad_fn = _estimator_grad(cfg)
+    # per-agent heterogeneous dynamics vmap exactly like fedpg.make_round_fn
+    hetero = isinstance(env, HeterogeneousEnv)
+    if hetero:
+        check_agent_count(env, cfg.n_agents)
     stale0 = jax.vmap(lambda _: tree_zeros_like(theta))(
         jnp.arange(cfg.n_agents)
     )
@@ -59,12 +64,15 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
         theta, stale = carry
         agent_keys = jax.random.split(key_k, cfg.n_agents)
 
-        def agent_grad(k):
-            traj = rollout_batch(env, policy, theta, k, cfg.horizon,
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon,
                                  cfg.batch_m)
             return grad_fn(policy, theta, traj, cfg.gamma), traj
 
-        grads, trajs = jax.vmap(agent_grad)(agent_keys)
+        grads, trajs = jax.vmap(agent_grad)(
+            agent_keys, dict(env.params) if hetero else {}
+        )
 
         # trigger test per agent
         def trig(g_new, g_old):

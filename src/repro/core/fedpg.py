@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import gpomdp
 from repro.core.ota import OTAConfig, aggregate_stacked, exact_aggregate
+from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import empirical_reward, rollout_batch
 from repro.utils.tree import tree_global_norm_sq
 
@@ -56,20 +57,30 @@ def _estimator_grad(cfg: FedPGConfig):
 
 
 def make_round_fn(env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig]):
-    """One communication round: (theta, key) -> (theta', metrics)."""
+    """One communication round: (theta, key) -> (theta', metrics).
+
+    A ``HeterogeneousEnv`` is unrolled per agent: the agent vmap additionally
+    maps over the wrapper's per-agent field stacks, so agent i samples from
+    its own dynamics inside the same jitted program.
+    """
 
     grad_fn = _estimator_grad(cfg)
+    hetero = isinstance(env, HeterogeneousEnv)
+    if hetero:
+        check_agent_count(env, cfg.n_agents)
 
     def round_fn(theta: PyTree, key: jax.Array):
         key_samp, key_chan = jax.random.split(key)
         agent_keys = jax.random.split(key_samp, cfg.n_agents)
 
         # --- local sampling + estimation (parallel across agents) --------
-        def agent_grad(k):
-            traj = rollout_batch(env, policy, theta, k, cfg.horizon, cfg.batch_m)
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
             return grad_fn(policy, theta, traj, cfg.gamma), traj
 
-        grads, trajs = jax.vmap(agent_grad)(agent_keys)   # leading N axis
+        lane_stacks = dict(env.params) if hetero else {}
+        grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)  # N axis
 
         # --- uplink + server update --------------------------------------
         if ota_cfg is None:

@@ -40,11 +40,21 @@ def total_discounted(losses: jax.Array, gamma: float) -> jax.Array:
 
 
 def _traj_logps(policy, params: PyTree, traj: Trajectory) -> jax.Array:
-    """log pi(a_t | s_t; theta) along time (and any leading batch dims)."""
+    """log pi(a_t | s_t; theta) along time (and any leading batch dims).
+
+    Discrete actions are scalar per step; continuous policies (e.g.
+    ``GaussianPolicy``) carry a trailing action-dim axis, which is flattened
+    alongside the observation one.  ``traj.losses`` always has exactly the
+    (batch..., time) shape, so it anchors both cases.
+    """
+    batch_time = traj.losses.shape
     flat_obs = traj.obs.reshape((-1, traj.obs.shape[-1]))
-    flat_act = traj.actions.reshape((-1,))
+    if traj.actions.ndim > len(batch_time):  # vector (continuous) actions
+        flat_act = traj.actions.reshape((-1, traj.actions.shape[-1]))
+    else:
+        flat_act = traj.actions.reshape((-1,))
     logps = jax.vmap(lambda o, a: policy.log_prob(params, o, a))(flat_obs, flat_act)
-    return logps.reshape(traj.actions.shape)
+    return logps.reshape(batch_time)
 
 
 def gpomdp_surrogate(

@@ -13,11 +13,13 @@ structural partition**:
 * **structural axes** change the trace shape or graph and force a partition
   split: ``n_agents``, ``batch_m``, ``horizon``, ``n_rounds``, ``gamma``,
   ``estimator``, ``debias``, the channel *family*, the power-control policy
-  *type*, noise on/off, and exact-vs-OTA uplink;
+  *type*, the environment *family* (registry kind tag, incl. structural
+  sizes like grid dims), the policy, noise on/off, and exact-vs-OTA uplink;
 * **continuous axes** (channel parameters, ``noise_sigma``, ``alpha``,
-  power-control parameters) batch inside a single jitted program — mapped
-  over scenarios, ``vmap``-ed over Monte-Carlo seeds — reusing the existing
-  ``fedpg.run`` round body unchanged.
+  power-control parameters, environment parameters — wind strengths, slip
+  probabilities, Garnet P/l/rho tables) batch inside a single jitted
+  program — mapped over scenarios, ``vmap``-ed over Monte-Carlo seeds —
+  reusing the existing ``fedpg.run`` round body unchanged.
 
 Exactness contract: a continuous axis that does **not** vary inside a
 partition is closed over as the same Python-float literal the per-scenario
@@ -26,11 +28,15 @@ under the same PRNG keys (XLA folds literals; re-materialising them as
 runtime values can move a multiply and drift the last mantissa bit).  Axes
 that do vary are fed as traced scalars via ``BatchedChannel`` /
 ``OTAConfig.update_scale``, whose float64-precomputed derived constants keep
-the channel draws and updates bit-identical as well; the only exception is
-the debias normaliser when the axes it depends on — channel parameters, or
-power-control parameters (effective moments) — vary within a partition,
-where ``grad_sq`` may differ in the final bit (documented in
-``Scenario.debias``).
+the channel draws and updates bit-identical as well; likewise the env
+registry packs only *varying* env parameters, so constant fields stay
+folded literals.  Two exceptions: the debias normaliser when the axes it
+depends on — channel parameters, or power-control parameters (effective
+moments) — vary within a partition, where ``grad_sq`` may differ in the
+final bit (documented in ``Scenario.debias``); and env families whose
+dynamics run matvec/quadratic reductions over the traced parameters (LQR),
+whose fusions may reassociate the final mantissa bit — elementwise-dynamics
+families (particle, cliff-walk, tabular) stay bitwise.
 
 Typical use::
 
@@ -65,6 +71,11 @@ from repro.core.ota import OTAConfig
 from repro.core.power_control import (
     PowerPolicy, check_agent_count, effective_moments,
 )
+from repro.rl.envs import (
+    batched_env_arrays, build_lane_env, env_kind, robust_eq, values_vary,
+)
+from repro.rl.envs import check_agent_count as check_env_agent_count
+from repro.rl.envs import default_policy as env_default_policy
 
 # Modes for laying scenarios into the partition program.  ``vmap`` (default)
 # batches lanes into one vectorised computation — fastest, and bit-identical
@@ -86,6 +97,13 @@ class Scenario:
     where known, deterministic Monte Carlo otherwise — when a policy is set
     (threaded through ``OTAConfig.update_scale`` in float64, so batched
     lanes and the per-scenario path fold in the identical constant).
+
+    ``env=None`` runs the environment ``sweep()`` was called with (the
+    pre-env-zoo convention); an env instance makes the workload itself a
+    grid axis — the env *family* (registry kind tag) is structural, its
+    continuous parameters batch as lanes through the registry packer hooks.
+    ``policy=None`` resolves to ``sweep()``'s policy for default-env
+    scenarios and to the env family's ``default_policy()`` otherwise.
     """
 
     channel: Optional[Channel] = None
@@ -99,6 +117,8 @@ class Scenario:
     estimator: str = "gpomdp"
     power_control: Optional[PowerPolicy] = None
     debias: bool = False
+    env: Any = None
+    policy: Any = None
     tag: str = ""  # free-form label carried into tables/CSV
 
     def fedpg_config(self) -> FedPGConfig:
@@ -147,6 +167,14 @@ class Scenario:
             f"{f.name}={_fmt_param(getattr(self.power_control, f.name))}"
             for f in dataclasses.fields(self.power_control)
         )
+        env_tag = "default" if self.env is None else _env_tag(self.env)
+        env_params = ""
+        if self.env is not None and dataclasses.is_dataclass(self.env):
+            env_params = ";".join(
+                f"{f.name}={_fmt_param(getattr(self.env, f.name))}"
+                for f in dataclasses.fields(self.env)
+            )
+        pol = "" if self.policy is None else type(self.policy).__name__
         m_eff, v_eff = self.effective_moments()
         return {
             "tag": self.tag, "channel": chan, "channel_params": chan_params,
@@ -155,18 +183,55 @@ class Scenario:
             "horizon": self.horizon, "gamma": self.gamma,
             "n_rounds": self.n_rounds, "estimator": self.estimator,
             "power_control": pc, "power_control_params": pc_params,
-            "debias": self.debias, "m_h_eff": m_eff, "sigma_h2_eff": v_eff,
+            "debias": self.debias, "env": env_tag, "env_params": env_params,
+            "policy": pol, "m_h_eff": m_eff, "sigma_h2_eff": v_eff,
         }
 
 
 def _fmt_param(v: Any) -> str:
     """Compact field rendering for describe(): numbers as %g, nested
-    channel/policy objects (e.g. ControlledChannel.base) as their type."""
+    channel/policy objects (e.g. ControlledChannel.base) as their type,
+    array-valued env parameters (TabularMDP tables, per-agent stacks) as
+    their shape."""
     if isinstance(v, (int, float)):
         return f"{v:g}"
     if dataclasses.is_dataclass(v):
         return type(v).__name__
+    if isinstance(v, (np.ndarray, jax.Array)):
+        return f"array{tuple(v.shape)}"
+    if isinstance(v, dict):
+        return "{" + " ".join(sorted(v)) + "}"
     return str(v)
+
+
+def _env_tag(env: Any) -> str:
+    """Registry kind when available, else the concrete type name (custom
+    envs outside the registry still sweep fine as partition constants)."""
+    try:
+        return env_kind(env)
+    except ValueError:
+        return type(env).__name__
+
+
+def resolve_env_policy(scenario: Scenario, env: Any = None, policy: Any = None):
+    """The (env, policy) a scenario actually runs: scenario fields override
+    the sweep-level defaults; a scenario-specific env with no explicit
+    policy resolves through the registry's ``default_policy`` hook (the
+    sweep-level policy is for the sweep-level env and would generally
+    mismatch the scenario env's observation/action spaces)."""
+    e = scenario.env if scenario.env is not None else env
+    if e is None:
+        raise ValueError(
+            "scenario has no env: set Scenario.env or pass sweep(env=...)"
+        )
+    if scenario.policy is not None:
+        p = scenario.policy
+    elif scenario.env is None and policy is not None:
+        p = policy
+    else:
+        p = env_default_policy(e)
+    check_env_agent_count(e, scenario.n_agents)
+    return e, p
 
 
 def grid(**axes) -> List[Scenario]:
@@ -201,17 +266,37 @@ def _channel_tag(ch: Channel) -> str:
         return type(ch).__name__
 
 
+def _workload_key(s: Scenario) -> Tuple:
+    """The (env, policy) part of the structure key.  The env *family* (kind
+    tag, which encodes structural ints like grid sizes) splits partitions;
+    same-family instances batch their continuous params as lanes.  The
+    policy is structural outright (its params pytree shapes the trace)."""
+    env_tag = None if s.env is None else _env_tag(s.env)
+    if s.policy is None:
+        pol_tag = None
+    else:
+        try:
+            hash(s.policy)
+            pol_tag = s.policy
+        except TypeError:
+            # unhashable policies (params-carrying dataclasses) split by
+            # identity: merging distinct instances by type would silently
+            # run the prototype's policy for every lane
+            pol_tag = (type(s.policy).__name__, id(s.policy))
+    return env_tag, pol_tag
+
+
 def _structure_key(s: Scenario) -> Tuple:
     """Everything that changes the trace shape or the computation graph."""
     if s.channel is None:
         # exact uplink: the OTA-only axes don't reach the program — zero
         # them so equivalent exact scenarios share one partition/compile.
         return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
-                s.estimator, False, None, None, False)
+                s.estimator, False, None, None, False) + _workload_key(s)
     pc = None if s.power_control is None else type(s.power_control).__name__
     return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
             s.estimator, s.debias, _channel_tag(s.channel), pc,
-            s.noise_sigma > 0.0)
+            s.noise_sigma > 0.0) + _workload_key(s)
 
 
 @dataclass
@@ -228,8 +313,10 @@ class Partition:
         return self.scenarios[0]
 
     def varying(self, name: str) -> bool:
-        vals = {getattr(s, name) for s in self.scenarios}
-        return len(vals) > 1
+        # unhashable values (envs carrying arrays: TabularMDP,
+        # HeterogeneousEnv) fall back to identity — distinct instances
+        # count as varying, so reuse ONE instance for a partition constant
+        return values_vary([getattr(s, name) for s in self.scenarios])
 
 
 def partition_scenarios(scenarios: Sequence[Scenario]) -> List[Partition]:
@@ -264,6 +351,13 @@ def _pack_partition(part: Partition) -> Dict[str, Any]:
     def f32(vals64):
         return jnp.asarray(np.asarray(vals64, np.float64), jnp.float32)
 
+    if part.proto.env is not None and part.varying("env"):
+        _, env_arrays = batched_env_arrays([s.env for s in part.scenarios])
+        # identity-distinct but parameter-identical envs (e.g. two all-equal
+        # fleets) pack to nothing: leave them out so the partition takes the
+        # replicate-one-lane path instead of vmapping a zero-leaf pytree
+        if env_arrays:
+            packed["env"] = {k: f32(v) for k, v in env_arrays.items()}
     if part.varying("alpha"):
         packed["alpha"] = f32([s.alpha for s in part.scenarios])
     if part.proto.channel is not None:
@@ -302,6 +396,9 @@ def _make_lane(env, policy, part: Partition):
     """
     proto = part.proto
     base_cfg = proto.fedpg_config()
+    # The scenario-resolved workload: proto env/policy override the sweep
+    # defaults, same resolution the per-scenario reference path uses.
+    lane_env, lane_policy = resolve_env_policy(proto, env, policy)
     # The per-scenario OTAConfig of the prototype: every constant axis —
     # including a power-control-derived update_scale literal — is closed
     # over exactly as the unbatched path would fold it in.
@@ -311,9 +408,17 @@ def _make_lane(env, policy, part: Partition):
     chan_kind = (channel_kind(proto.channel)
                  if proto.channel is not None and part.varying("channel")
                  else None)
+    # Likewise for env params: the registry builder reconstructs a lane env
+    # from traced scalars; constant envs are closed over as-is.
+    env_tag = (env_kind(proto.env)
+               if proto.env is not None and part.varying("env")
+               else None)
     pc_type = None if proto.power_control is None else type(proto.power_control)
 
     def lane(packed: Dict[str, Any], keys: jax.Array) -> History:
+        env_l = lane_env
+        if "env" in packed:
+            env_l = build_lane_env(env_tag, lane_env, packed["env"])
         cfg = base_cfg
         if "alpha" in packed:
             cfg = replace(cfg, alpha=packed["alpha"])
@@ -330,7 +435,7 @@ def _make_lane(env, policy, part: Partition):
             if "update_scale" in packed:
                 ota = replace(ota, update_scale=packed["update_scale"])
         return jax.vmap(
-            lambda k: fedpg.run(env, policy, cfg, k, ota=ota)[1]
+            lambda k: fedpg.run(env_l, lane_policy, cfg, k, ota=ota)[1]
         )(keys)
 
     return lane
@@ -388,9 +493,14 @@ class SweepResult:
         return float(jnp.mean(jnp.asarray(self.history.grad_sq[i])))
 
     def index(self, **fields) -> int:
-        """Position of the first scenario matching all given field values."""
+        """Position of the first scenario matching all given field values.
+
+        ``env=`` matches by identity first, then equality — envs carrying
+        arrays (TabularMDP, HeterogeneousEnv) compare ambiguously under
+        ``==``, so pass the same instance the scenario was built with.
+        """
         for i, s in enumerate(self.scenarios):
-            if all(getattr(s, k) == v for k, v in fields.items()):
+            if all(robust_eq(getattr(s, k), v) for k, v in fields.items()):
                 return i
         raise KeyError(f"no scenario matches {fields}")
 
@@ -458,6 +568,10 @@ def sweep(
     — exactly what per-scenario ``fedpg.monte_carlo(..., key, mc_runs)``
     calls would use, so results are directly comparable across scenarios
     and against the unbatched path.
+
+    ``env``/``policy`` are the defaults for scenarios that don't carry their
+    own (see ``Scenario.env``); a grid where every scenario names an env may
+    pass ``env=None, policy=None``.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")

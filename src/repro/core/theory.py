@@ -222,6 +222,36 @@ def corollary1_schedule(epsilon: float, *, c_k: float = 1.0, c_n: float = 1.0,
     return ComplexitySchedule(epsilon=epsilon, K=K, n_agents=N, batch_m=M)
 
 
+def env_l_bar(env, horizon: int) -> float:
+    """The Assumption-1 loss envelope for ``env`` at the *actual* horizon.
+
+    Prefers the env's ``l_bar_for(horizon)`` hook (horizon-dependent
+    envelopes: the landmark tasks drift ``step_size * T`` from the arena,
+    so a fixed-``T`` constant silently under-states l_bar for longer runs);
+    falls back to a static ``l_bar`` attribute.
+    """
+    fn = getattr(env, "l_bar_for", None)
+    if callable(fn):
+        return float(fn(horizon))
+    lb = getattr(env, "l_bar", None)
+    if lb is not None:
+        return float(lb)
+    raise ValueError(
+        f"environment {type(env).__name__} exposes neither l_bar_for() nor "
+        "l_bar; pass MDPConstants explicitly"
+    )
+
+
+def constants_for_env(
+    env, *, horizon: int, gamma: float, G: float, F: float
+) -> MDPConstants:
+    """``MDPConstants`` with ``l_bar`` derived from the env at the configured
+    horizon — the safe way to build theory tables (Theorem 1/2 bounds scale
+    with ``l_bar^2`` through V, so a stale fixed-horizon envelope corrupts
+    every bound)."""
+    return MDPConstants(G=G, F=F, l_bar=env_l_bar(env, horizon), gamma=gamma)
+
+
 def mlp_policy_constants(
     *, weight_bound: float, input_bound: float, hidden: int, n_actions: int,
     l_bar: float, gamma: float,

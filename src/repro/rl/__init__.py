@@ -1,2 +1,3 @@
-"""JAX-native RL substrate: environments, policies, trajectory sampling."""
-from repro.rl import env, policy, sampler  # noqa: F401
+"""JAX-native RL substrate: environments, policies, trajectory sampling,
+and the environment zoo/registry (``repro.rl.envs``)."""
+from repro.rl import env, envs, policy, sampler  # noqa: F401

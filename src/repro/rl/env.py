@@ -14,9 +14,19 @@ Both are stateless pure-function environments:
     reset(key)            -> state
     step(key, state, a)   -> (next_state, loss)
 compatible with ``lax.scan`` rollouts in ``sampler.py``.
+
+The wider environment zoo (windy/multi-landmark particle tasks, cliff-walk
+grids, LQR, Garnet MDPs, heterogeneous per-agent wrappers) lives in
+``repro.rl.envs``, which also hosts the env registry that makes the
+environment a first-class sweep axis.  Envs may expose:
+
+    kind_tag()        -> str     structural tag for sweep partitioning
+    default_policy()  -> policy  a compatible policy (registry hook)
+    l_bar_for(T)      -> float   loss envelope at horizon T (Assumption 1)
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Tuple
 
@@ -61,16 +71,30 @@ class LandmarkNav:
         d = state[:2] - state[2:]
         return jnp.sqrt(jnp.sum(d * d) + 1e-12)
 
+    def l_bar_for(self, horizon: int) -> float:
+        """Loss envelope for Assumption 1 at the *actual* configured horizon.
+
+        Positions start in [-a, a]^2 and can drift step_size*T further, so
+        the worst-case distance to the landmark is the diagonal of
+        [-(a + step_size*T), a + step_size*T]^2.  (Used only for theory
+        tables — pass the horizon the run actually uses, e.g.
+        ``FedPGConfig.horizon``.)
+        """
+        reach = self.arena + self.step_size * horizon
+        return float(2.0 * reach * math.sqrt(2.0))
+
     @property
     def l_bar(self) -> float:
-        """Loss envelope for Assumption 1 given the bounded arena + T moves.
+        """Legacy fixed-horizon envelope: ``l_bar_for(20)`` (the paper's
+        T=20).  Theory tables for other horizons must use ``l_bar_for``."""
+        return self.l_bar_for(20)
 
-        Positions start in [-a, a]^2 and can drift step_size*T further, so the
-        worst-case distance is bounded.  (Used only for theory tables.)
-        """
-        # conservative: diag of [-(a+0.1*T), a+0.1*T]^2 with T<=20 at build
-        reach = self.arena + self.step_size * 20
-        return float(2.0 * reach * jnp.sqrt(2.0))
+    def default_policy(self):
+        """The paper's target policy for this task (registry hook)."""
+        from repro.rl.policy import MLPPolicy
+
+        return MLPPolicy(obs_dim=self.obs_dim, hidden=16,
+                         n_actions=self.n_actions)
 
 
 @dataclass(frozen=True)
@@ -99,6 +123,25 @@ class TabularMDP:
     @property
     def obs_dim(self) -> int:
         return self.n_states  # one-hot observation
+
+    def kind_tag(self) -> str:
+        """Structural sweep tag: the (S, A) shape is what changes the trace;
+        the P/l/rho tables themselves batch as lane parameters."""
+        return f"tabular:{self.n_states}x{self.n_actions}"
+
+    def default_policy(self):
+        from repro.rl.policy import TabularSoftmaxPolicy
+
+        return TabularSoftmaxPolicy(self.n_states, self.n_actions)
+
+    def l_bar_for(self, horizon: int) -> float:
+        """sup loss straight off the (known) loss table."""
+        del horizon  # table bound is horizon-independent
+        return float(jnp.max(self.l))
+
+    @property
+    def l_bar(self) -> float:
+        return self.l_bar_for(0)
 
     @staticmethod
     def random(key: jax.Array, n_states: int = 4, n_actions: int = 3,

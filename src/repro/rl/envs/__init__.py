@@ -1,0 +1,31 @@
+"""Environment zoo: the ``env`` axis of the scenario-sweep engine.
+
+Importing this package registers every built-in family:
+
+    landmark        — the paper's landmark-covering particle task
+    windy           — LandmarkNav + constant wind drift and Gaussian gusts
+    multilandmark   — nearest-of-L landmark covering (multi-modal loss)
+    cliffwalk       — Sutton-Barto cliff walking (one-hot states, slip)
+    lqr             — linear-quadratic regulation (continuous actions,
+                      pairs with GaussianPolicy)
+    tabular         — known-model finite MDPs (incl. the Garnet generator)
+                      with exact J/gradients; P/l/rho batch as lanes
+    hetero          — per-agent heterogeneous wrapper over any family
+
+See ``registry.register_env`` to add families (packer/builder hooks make
+continuous env parameters batch as sweep lanes, exactly like
+``channel.register_channel``).
+"""
+from repro.rl.envs.gridworld import CliffWalk  # noqa: F401
+from repro.rl.envs.heterogeneous import (  # noqa: F401
+    HeterogeneousEnv, check_agent_count, make_heterogeneous_env,
+)
+from repro.rl.envs.lqr import LQRTask  # noqa: F401
+from repro.rl.envs.particle import (  # noqa: F401
+    MultiLandmarkNav, WindyLandmarkNav,
+)
+from repro.rl.envs.registry import (  # noqa: F401
+    batched_env_arrays, build_lane_env, default_policy, env_kind,
+    is_float_field, make_env, register_env, robust_eq, values_vary,
+)
+from repro.rl.envs.tabular import garnet  # noqa: F401

@@ -1,0 +1,106 @@
+"""Finite grid worlds with one-hot observations.
+
+``CliffWalk`` is the classic Sutton & Barto cliff-walking task in the
+paper's loss (cost) convention: a W x H grid, start bottom-left, goal
+bottom-right, a cliff along the bottom edge between them.  Stepping into
+the cliff costs ``cliff_cost`` and teleports the agent back to the start;
+every other step costs ``step_cost`` except the absorbing goal (cost 0).
+``slip`` is the probability the chosen action is replaced by a uniformly
+random one — the stochasticity knob, and a continuous sweep-lane
+parameter (grid size is structural via the kind tag).
+
+Observations are one-hot over the W*H cells, so ``TabularSoftmaxPolicy``
+pairs with it naturally; losses are bounded by ``max(cliff_cost,
+step_cost)``, giving an exact Assumption-1 envelope.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.registry import register_env
+
+# action -> (dx, dy): up, down, left, right
+_MOVES = ((0, 1), (0, -1), (-1, 0), (1, 0))
+
+
+@dataclass(frozen=True)
+class CliffWalk:
+    """W x H cliff-walk grid; cells are indexed s = y * width + x."""
+
+    width: int = 6
+    height: int = 4
+    slip: float = 0.05
+    cliff_cost: float = 1.0
+    step_cost: float = 0.1
+    n_actions: int = 4
+
+    @property
+    def obs_dim(self) -> int:
+        return self.width * self.height
+
+    @property
+    def start_state(self) -> int:
+        return 0  # (0, 0), bottom-left
+
+    @property
+    def goal_state(self) -> int:
+        return self.width - 1  # (W-1, 0), bottom-right
+
+    def kind_tag(self) -> str:
+        return f"cliffwalk:{self.width}x{self.height}"
+
+    def _cliff_mask(self) -> jnp.ndarray:
+        """(W*H,) bool: bottom-row cells strictly between start and goal."""
+        cell = jnp.arange(self.width * self.height)
+        x, y = cell % self.width, cell // self.width
+        return (y == 0) & (x > 0) & (x < self.width - 1)
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        del key  # deterministic start
+        return jax.nn.one_hot(self.start_state, self.obs_dim)
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        s = jnp.argmax(state)
+        key_slip, key_act = jax.random.split(key)
+        u = jax.random.uniform(key_slip, (), jnp.float32)
+        rand_a = jax.random.randint(key_act, (), 0, self.n_actions)
+        a = jnp.where(u < self.slip, rand_a, action)
+
+        moves = jnp.array(_MOVES, jnp.int32)
+        x, y = s % self.width, s // self.width
+        x2 = jnp.clip(x + moves[a, 0], 0, self.width - 1)
+        y2 = jnp.clip(y + moves[a, 1], 0, self.height - 1)
+        nxt = y2 * self.width + x2
+
+        in_cliff = self._cliff_mask()[nxt]
+        at_goal = s == self.goal_state
+        # goal is absorbing: stay put, zero loss
+        nxt = jnp.where(at_goal, s, jnp.where(in_cliff, self.start_state, nxt))
+        loss = jnp.where(
+            at_goal,
+            0.0,
+            jnp.where(in_cliff, self.cliff_cost, self.step_cost),
+        ).astype(jnp.float32)
+        return jax.nn.one_hot(nxt, self.obs_dim), loss
+
+    def l_bar_for(self, horizon: int) -> float:
+        del horizon  # per-step cost bound is horizon-independent
+        return float(max(self.cliff_cost, self.step_cost))
+
+    @property
+    def l_bar(self) -> float:
+        return self.l_bar_for(0)
+
+    def default_policy(self):
+        from repro.rl.policy import TabularSoftmaxPolicy
+
+        return TabularSoftmaxPolicy(self.obs_dim, self.n_actions)
+
+
+register_env("cliffwalk", CliffWalk)

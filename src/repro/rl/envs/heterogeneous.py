@@ -1,0 +1,172 @@
+"""Per-agent heterogeneous environments for the federated loops.
+
+The paper's agents all face the same MDP; the over-the-air FL literature
+stresses exactly the opposite regime — per-client heterogeneity.
+``HeterogeneousEnv`` carries a prototype env plus per-agent stacked values
+for the fields that differ, and ``fedpg.make_round_fn`` /
+``event_triggered.run`` vmap the agent axis over those stacks, so agent i
+samples its trajectories from its OWN dynamics inside the same single
+jitted program.
+
+Mirrors ``power_control``'s per-agent contract: ``check_agent_count``
+guards against running a wrapper built for N agents with a different
+``FedPGConfig.n_agents`` (the vmap would silently mis-broadcast or crash
+deep inside the scan otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.envs.registry import default_policy as _default_policy
+from repro.rl.envs.registry import (
+    env_kind, is_float_field, register_env, robust_eq,
+)
+
+
+@dataclass(frozen=True)
+class HeterogeneousEnv:
+    """A fleet of same-family envs: ``base`` + per-agent field stacks.
+
+    ``params[name]`` has a leading ``(n_agents,)`` axis; agent i runs
+    ``dataclasses.replace(base, **{name: params[name][i]})``.  Fields not in
+    ``params`` are shared (closed over as the base literals).  Build with
+    :func:`make_heterogeneous_env`.
+    """
+
+    base: Any
+    params: Dict[str, Any]
+    n_agents: int
+
+    def lane(self, lane_params: Dict[str, Any]) -> Any:
+        """The member env for one agent's slice of the stacks (called under
+        vmap, so values are traced scalars)."""
+        return dataclasses.replace(self.base, **lane_params)
+
+    def member(self, i: int) -> Any:
+        """Concrete member env for agent ``i`` (inspection / per-scenario
+        reference paths)."""
+        return dataclasses.replace(
+            self.base,
+            **{k: (float(v[i]) if jnp.ndim(v[i]) == 0 else v[i])
+               for k, v in self.params.items()},
+        )
+
+    def kind_tag(self) -> str:
+        return f"hetero:{env_kind(self.base)}:{self.n_agents}"
+
+    @property
+    def obs_dim(self) -> int:
+        return self.base.obs_dim  # one shared policy across the fleet
+
+    def default_policy(self):
+        return _default_policy(self.base)
+
+
+def _is_array(v: Any) -> bool:
+    return isinstance(v, (np.ndarray, jax.Array))
+
+
+def make_heterogeneous_env(envs: Sequence[Any]) -> HeterogeneousEnv:
+    """Stack a list of same-type envs (one per agent) into a wrapper.
+
+    Declared-float fields that differ across members become per-agent
+    stacks; fields that agree stay on the base prototype as shared literals
+    (so a degenerate all-equal fleet runs the closest possible program to
+    the plain env).  Array-valued fields (TabularMDP/Garnet P/l/rho tables)
+    stack per agent whenever any member differs, so a fleet of Garnet draws
+    gives every agent its own MDP.  Other fields must agree — they are
+    structural.
+    """
+    if not envs:
+        raise ValueError("empty env list")
+    base = envs[0]
+    types = {type(e) for e in envs}
+    if len(types) != 1:
+        raise ValueError(
+            f"heterogeneous agents must share one env family, got "
+            f"{sorted(t.__name__ for t in types)}"
+        )
+    params: Dict[str, Any] = {}
+    for f in dataclasses.fields(base):
+        vals = [getattr(e, f.name) for e in envs]
+        if is_float_field(f):
+            if any(float(v) != float(vals[0]) for v in vals):
+                params[f.name] = jnp.asarray([float(v) for v in vals],
+                                             jnp.float32)
+        elif _is_array(vals[0]):
+            if not all(np.array_equal(np.asarray(v), np.asarray(vals[0]))
+                       for v in vals[1:]):
+                params[f.name] = jnp.stack([jnp.asarray(v) for v in vals])
+        elif any(v != vals[0] for v in vals[1:]):
+            raise ValueError(
+                f"non-float field {f.name!r} varies across agents; such "
+                "fields are structural and cannot differ within one fleet"
+            )
+    return HeterogeneousEnv(base=base, params=params, n_agents=len(envs))
+
+
+def check_agent_count(env: Any, n_agents: int) -> None:
+    """Guard against a HeterogeneousEnv built for a different fleet size
+    than the config runs with (mirrors ``power_control.check_agent_count``)."""
+    if isinstance(env, HeterogeneousEnv) and env.n_agents != n_agents:
+        raise ValueError(
+            f"HeterogeneousEnv carries per-agent params for n_agents="
+            f"{env.n_agents} but the scenario runs {n_agents} agents; "
+            f"rebuild it with one member env per agent"
+        )
+
+
+def _pack_hetero(envs: Sequence[HeterogeneousEnv]) -> Dict[str, np.ndarray]:
+    """Sweep packer: several same-shape fleets batch as lanes — each lane
+    carries its own per-agent stacks (``pa.<field>`` of shape
+    ``(lanes, n_agents, ...)``).  Fleets must stack the same fields and
+    agree on every *non-stacked* base field (stacked fields are always
+    overridden per agent, so their base values are irrelevant and are
+    neutralised before the comparison)."""
+    keys = {tuple(sorted(e.params)) for e in envs}
+    if len(keys) != 1:
+        raise ValueError(
+            f"cannot batch HeterogeneousEnv fleets stacking different "
+            f"fields {sorted(keys)}; stack the same per-agent fields in "
+            "every fleet (constant members are fine)"
+        )
+    base = envs[0].base
+    stacked = dict.fromkeys(envs[0].params)
+
+    def neutral(e: HeterogeneousEnv) -> Any:
+        # stacked fields never reach the program from the base — pin them
+        # to fleet-0's values so only genuinely shared fields compare
+        return dataclasses.replace(
+            e.base, **{k: getattr(base, k) for k in stacked}
+        )
+
+    if not all(robust_eq(neutral(e), base) for e in envs[1:]):
+        raise ValueError(
+            "cannot batch HeterogeneousEnv fleets whose bases differ in a "
+            "non-stacked field in one partition; for array-valued bases "
+            "reuse one base instance across fleets"
+        )
+    return {
+        f"pa.{k}": np.stack([np.asarray(e.params[k], np.float64)
+                             for e in envs])
+        for k in envs[0].params
+    }
+
+
+def _build_hetero(kind: str, proto: HeterogeneousEnv, params: Dict[str, Any]):
+    del kind
+    return HeterogeneousEnv(
+        base=proto.base,
+        params={k[len("pa."):]: v for k, v in params.items()},
+        n_agents=proto.n_agents,
+    )
+
+
+register_env("hetero", HeterogeneousEnv, packer=_pack_hetero,
+             builder=_build_hetero)

@@ -1,0 +1,80 @@
+"""Linear-quadratic regulation as a policy-gradient benchmark.
+
+Dynamics  s' = A s + gain * a + process_sigma * w,  w ~ N(0, I)
+Loss      l(s, a) = q_cost * ||s||^2 + r_cost * ||a||^2
+
+with A = drift * I + coupling * (rotation couple): a stable (for
+``hypot(drift, coupling) < 1``) linear system whose optimal policy is a
+linear state feedback — exactly what ``GaussianPolicy`` parameterises, so
+continuous actions exercise the whole federated G(PO)MDP path (which only
+needs ``log_prob``/``sample``) with a task whose optimum is analytically
+understood.
+
+All four scalars (``drift``, ``coupling``, ``gain``, ``process_sigma``,
+plus the two costs) are continuous sweep-lane parameters; ``dim`` changes
+the trace shape and is structural (kind tag ``lqr:<dim>``).
+
+Note: the quadratic loss is unbounded, so Assumption 1 (and the Theorem 1/2
+tables) do not apply to this family — it is a simulation-only workload.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.registry import register_env
+
+
+@dataclass(frozen=True)
+class LQRTask:
+    """d-dimensional LQR with isotropic process noise."""
+
+    dim: int = 2
+    drift: float = 0.9
+    coupling: float = 0.1
+    gain: float = 0.5
+    process_sigma: float = 0.05
+    q_cost: float = 1.0
+    r_cost: float = 0.1
+    init_scale: float = 1.0
+
+    @property
+    def obs_dim(self) -> int:
+        return self.dim
+
+    @property
+    def act_dim(self) -> int:
+        return self.dim
+
+    def kind_tag(self) -> str:
+        return f"lqr:{self.dim}"
+
+    def _A(self) -> jnp.ndarray:
+        d = self.dim
+        eye = jnp.eye(d, dtype=jnp.float32)
+        skew = jnp.eye(d, k=1, dtype=jnp.float32) - jnp.eye(d, k=-1, dtype=jnp.float32)
+        return self.drift * eye + self.coupling * skew
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        return self.init_scale * jax.random.normal(key, (self.dim,), jnp.float32)
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        w = jax.random.normal(key, (self.dim,), jnp.float32)
+        nxt = self._A() @ state + self.gain * action + self.process_sigma * w
+        loss = self.q_cost * jnp.sum(state * state) + self.r_cost * jnp.sum(
+            action * action
+        )
+        return nxt, loss
+
+    def default_policy(self):
+        from repro.rl.policy import GaussianPolicy
+
+        return GaussianPolicy(obs_dim=self.dim, act_dim=self.act_dim)
+
+
+register_env("lqr", LQRTask)

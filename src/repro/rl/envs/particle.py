@@ -1,0 +1,121 @@
+"""Particle-family environments beyond the paper's landmark task.
+
+``WindyLandmarkNav`` perturbs the paper's dynamics with a constant wind
+drift plus Gaussian gusts — the smallest change that makes the transition
+kernel stochastic (the paper's task is deterministic given the action), and
+the canonical per-agent heterogeneity knob: a ``HeterogeneousEnv`` over
+per-agent winds models a fleet of drones in different air columns.
+
+``MultiLandmarkNav`` generalises the loss to the nearest of L landmarks,
+so the reward landscape is multi-modal and the policy must commit to a
+target.  Both keep the paper's 5-action discrete control and are pure
+``lax.scan``-compatible functions of (key, state, action).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.env import LandmarkNav
+from repro.rl.envs.registry import register_env
+
+
+@dataclass(frozen=True)
+class WindyLandmarkNav(LandmarkNav):
+    """LandmarkNav with stochastic drift: pos += move + wind + gust.
+
+    ``wind`` is a constant +x drift per step; ``gust_sigma`` scales an
+    isotropic Gaussian perturbation.  With ``wind=0, gust_sigma=0`` the
+    dynamics reduce bit-for-bit to ``LandmarkNav`` (the gust draw is still
+    consumed, keeping the PRNG layout self-consistent but distinct from the
+    base class, which never splits its step key).
+    """
+
+    wind: float = 0.05
+    gust_sigma: float = 0.02
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        gust = self.gust_sigma * jax.random.normal(key, (2,), jnp.float32)
+        drift = jnp.stack(
+            [jnp.asarray(self.wind, jnp.float32), jnp.zeros((), jnp.float32)]
+        )
+        pos = state[:2] + self.moves[action] + drift + gust
+        nxt = jnp.concatenate([pos, state[2:]])
+        return nxt, self.loss(nxt)
+
+    def l_bar_for(self, horizon: int) -> float:
+        """Envelope accounting for the drift; the Gaussian gusts are
+        unbounded, so this is the 3-sigma high-probability envelope (noted
+        caveat to Assumption 1 — exact for ``gust_sigma=0``)."""
+        per_step = self.step_size + abs(self.wind) + 3.0 * self.gust_sigma
+        reach = self.arena + per_step * horizon
+        return float(2.0 * reach * math.sqrt(2.0))
+
+
+@dataclass(frozen=True)
+class MultiLandmarkNav:
+    """Nearest-of-L landmark covering: l(s) = min_j ||pos - landmark_j||.
+
+    state = (x, y, x_1, y_1, ..., x_L, y_L); same 5 discrete actions as
+    ``LandmarkNav``.  ``n_landmarks`` changes the observation size and is
+    therefore structural (encoded in the kind tag); ``arena``/``step_size``
+    batch as sweep lanes.
+    """
+
+    n_landmarks: int = 3
+    arena: float = 1.0
+    step_size: float = 0.1
+    n_actions: int = 5
+
+    @property
+    def obs_dim(self) -> int:
+        return 2 + 2 * self.n_landmarks
+
+    def kind_tag(self) -> str:
+        return f"multilandmark:{self.n_landmarks}"
+
+    @property
+    def moves(self) -> jnp.ndarray:
+        return jnp.array(
+            [[0.0, 0.0], [-1.0, 0.0], [1.0, 0.0], [0.0, 1.0], [0.0, -1.0]],
+            jnp.float32,
+        ) * self.step_size
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        return jax.random.uniform(
+            key, (self.obs_dim,), jnp.float32,
+            minval=-self.arena, maxval=self.arena,
+        )
+
+    def step(
+        self, key: jax.Array, state: jax.Array, action: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        del key  # deterministic dynamics
+        pos = state[:2] + self.moves[action]
+        nxt = jnp.concatenate([pos, state[2:]])
+        return nxt, self.loss(nxt)
+
+    def loss(self, state: jax.Array) -> jax.Array:
+        marks = state[2:].reshape(self.n_landmarks, 2)
+        d = marks - state[:2]
+        return jnp.sqrt(jnp.min(jnp.sum(d * d, axis=-1)) + 1e-12)
+
+    def l_bar_for(self, horizon: int) -> float:
+        reach = self.arena + self.step_size * horizon
+        return float(2.0 * reach * math.sqrt(2.0))
+
+    def default_policy(self):
+        from repro.rl.policy import MLPPolicy
+
+        return MLPPolicy(obs_dim=self.obs_dim, hidden=16,
+                         n_actions=self.n_actions)
+
+
+register_env("windy", WindyLandmarkNav)
+register_env("multilandmark", MultiLandmarkNav)

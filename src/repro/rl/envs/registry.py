@@ -1,0 +1,184 @@
+"""Environment registry: ``env`` as a first-class, batchable sweep axis.
+
+Mirrors ``repro.core.channel``'s registry contract exactly:
+
+* ``register_env(name, cls, packer=..., builder=...)`` adds an environment
+  family; ``env_kind`` reverse-looks-up the structural kind tag (classes may
+  refine theirs via a ``kind_tag()`` method, e.g.
+  ``CliffWalk -> 'cliffwalk:6x4'``), and ``make_env(name, **kw)`` is the
+  string factory.
+* ``batched_env_arrays(envs)`` stacks a same-kind env list into per-parameter
+  float64 arrays for the sweep engine.  The default packer stacks every
+  *float* dataclass field (matching ``batched_channel_arrays``: all fields of
+  the varying dataclass travel as lane parameters) and requires non-float
+  fields — grid sizes, action counts — to agree, since those are structural
+  and belong in the kind tag.  Families with array-valued parameters
+  (``TabularMDP``) register a custom ``packer``.
+* ``build_lane_env(kind, proto, params)`` reconstructs a lane's environment
+  from traced scalar parameters.  The default builder is
+  ``dataclasses.replace(proto, **params)`` — the concrete frozen dataclasses
+  hold tracers fine, and because the lane env runs the *same methods* as the
+  concrete instance (same ops, same PRNG layout), rollouts are bit-identical
+  to the per-scenario path at equal parameter values.
+
+``default_policy(env)`` dispatches to the env's ``default_policy()`` hook so
+a scenario that only names an environment still resolves to a compatible
+policy (obs dim / action space follow the env family).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.rl.env import LandmarkNav, TabularMDP
+
+_REGISTRY: Dict[str, type] = {}
+_PACKERS: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {}
+_BUILDERS: Dict[str, Callable[..., Any]] = {}
+
+
+def register_env(
+    name: str,
+    cls: type,
+    *,
+    packer: Callable[..., Dict[str, np.ndarray]] | None = None,
+    builder: Callable[..., Any] | None = None,
+) -> None:
+    """Add an environment family to the registry (and the sweep engine).
+
+    ``packer``/``builder`` are only needed when the dataclass fields are not
+    all plain floats; a class may also define ``kind_tag()`` returning a
+    refined structural tag (``'<name>:<...>'``) so structurally incompatible
+    members of the family land in separate sweep partitions.  Hooks are
+    keyed by the *root* of the kind tag (the part before the first ':').
+    """
+    _REGISTRY[name] = cls
+    if packer is not None:
+        _PACKERS[name] = packer
+    if builder is not None:
+        _BUILDERS[name] = builder
+
+
+def env_kind(env: Any) -> str:
+    """Reverse registry lookup: LandmarkNav() -> 'landmark'.
+
+    Registered classes may refine their tag via ``kind_tag()`` (e.g.
+    ``CliffWalk() -> 'cliffwalk:6x4'``) so partitioning distinguishes
+    structurally different members of one family.
+    """
+    for name, cls in _REGISTRY.items():
+        if type(env) is cls:
+            tag = getattr(env, "kind_tag", None)
+            return tag() if callable(tag) else name
+    raise ValueError(f"environment {type(env).__name__} is not in the registry")
+
+
+def make_env(name: str, **kwargs) -> Any:
+    """Factory: make_env('landmark'), make_env('cliffwalk', width=5)."""
+    try:
+        return _REGISTRY[name](**kwargs)
+    except KeyError as e:
+        raise ValueError(
+            f"unknown environment {name!r}; choose from {sorted(_REGISTRY)}"
+        ) from e
+
+
+def default_policy(env: Any):
+    """A policy compatible with ``env`` (the env's ``default_policy`` hook)."""
+    hook = getattr(env, "default_policy", None)
+    if callable(hook):
+        return hook()
+    raise ValueError(
+        f"environment {type(env).__name__} exposes no default_policy(); "
+        "pass an explicit policy (Scenario.policy or sweep(..., policy=...))"
+    )
+
+
+def is_float_field(f: dataclasses.Field) -> bool:
+    """Whether a dataclass field is *declared* float (continuous parameter).
+
+    The declaration, not the runtime value, is the schema: ``wind=0`` (an
+    int literal in a ``wind: float`` field) is still a lane parameter, while
+    ``width: int = 5`` is structural whatever its value.  Annotations may be
+    strings under ``from __future__ import annotations``.
+    """
+    return f.type is float or f.type == "float"
+
+
+def values_vary(vals: Sequence[Any]) -> bool:
+    """Robust inequality over field values: falls back to identity for
+    unhashable values (dicts, envs carrying arrays) — so reuse ONE instance
+    when a value must read as partition-constant.  Shared by the sweep
+    engine's ``Partition.varying``."""
+    try:
+        return len(set(vals)) > 1
+    except TypeError:
+        return any(v is not vals[0] for v in vals[1:])
+
+
+def robust_eq(a: Any, b: Any) -> bool:
+    """``a == b`` that treats ambiguous comparisons (array-valued dataclass
+    fields) as unequal instead of raising.  Shared by ``SweepResult.index``
+    and the heterogeneous-fleet base check."""
+    if a is b:
+        return True
+    try:
+        return bool(a == b)
+    except (TypeError, ValueError):
+        return False
+
+
+def batched_env_arrays(envs: Sequence[Any]) -> Tuple[str, Dict[str, np.ndarray]]:
+    """Stack a same-kind env list into per-parameter float64 arrays.
+
+    Returns ``(kind, params)`` where each ``params[name]`` has a leading
+    ``len(envs)`` axis.  The default packer stacks every declared-float
+    dataclass field; other fields must not vary (they are structural —
+    refine the family's ``kind_tag()`` instead).  Families registered with
+    a ``packer`` (array-valued parameters) stack through their hook.
+    """
+    kinds = {env_kind(e) for e in envs}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot batch across env kinds {sorted(kinds)}")
+    kind = kinds.pop()
+    root = kind.split(":", 1)[0]
+    if root in _PACKERS:
+        return kind, _PACKERS[root](envs)
+    params: Dict[str, np.ndarray] = {}
+    for f in dataclasses.fields(envs[0]):
+        vals = [getattr(e, f.name) for e in envs]
+        if is_float_field(f):
+            # only *varying* fields become lane parameters: constant fields
+            # stay closed over as the same Python literals the per-scenario
+            # program folds in (the engine's exactness contract)
+            if any(float(v) != float(vals[0]) for v in vals[1:]):
+                params[f.name] = np.array([float(v) for v in vals], np.float64)
+        elif values_vary(vals):
+            raise ValueError(
+                f"env kind {kind!r} varies non-float field {f.name!r} inside "
+                "one sweep partition; such fields are structural and must be "
+                "encoded in the family's kind_tag()"
+            )
+    return kind, params
+
+
+def build_lane_env(kind: str, proto: Any, params: Dict[str, Any]) -> Any:
+    """Reconstruct a lane environment from one slice of the packed arrays.
+
+    ``proto`` is the partition's prototype env (carries every structural /
+    constant field); ``params`` holds the lane's traced parameter scalars.
+    The default builder replaces the packed fields on the prototype — the
+    frozen dataclasses hold tracers fine, and their methods then run the
+    identical ops the concrete instance would.
+    """
+    root = kind.split(":", 1)[0]
+    if root in _BUILDERS:
+        return _BUILDERS[root](kind, proto, params)
+    return dataclasses.replace(proto, **params)
+
+
+# The seed environments are first-class registry citizens; ``TabularMDP``
+# gets its array packer/builder in ``repro.rl.envs.tabular``.
+register_env("landmark", LandmarkNav)

@@ -1,0 +1,74 @@
+"""Garnet-style tabular MDP generation + registry packing for TabularMDP.
+
+Garnet ("Generalized Average Reward Non-stationary Environment Testbench",
+Archibald et al.) MDPs are the standard random-MDP family for anchoring
+estimators against exact quantities: every (s, a) pair transitions to a
+small random subset of ``branching`` next states with Dirichlet weights, so
+the kernel is sparse but fully known — ``TabularMDP.exact_J`` (and its
+autodiff gradient) remain available for unbiasedness tests at any size.
+
+``TabularMDP`` is registered here with array-valued packer/builder hooks:
+same-shaped instances (the ``tabular:SxA`` kind tag) batch their P/l/rho
+tables as sweep lanes, so a grid over Garnet draws compiles ONE program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.env import TabularMDP
+from repro.rl.envs.registry import register_env
+
+
+def garnet(
+    key: jax.Array,
+    n_states: int = 8,
+    n_actions: int = 4,
+    branching: int = 3,
+    gamma: float = 0.9,
+    horizon: int = 5,
+) -> TabularMDP:
+    """Sample a Garnet MDP: each (s, a) reaches ``branching`` distinct next
+    states with Dirichlet(1) weights; losses uniform in [0, 1]."""
+    if not 1 <= branching <= n_states:
+        raise ValueError(
+            f"branching must be in [1, n_states={n_states}], got {branching}"
+        )
+    kp, kl, kr = jax.random.split(key, 3)
+
+    def one_row(k: jax.Array) -> jax.Array:
+        k_idx, k_w = jax.random.split(k)
+        idx = jax.random.choice(k_idx, n_states, (branching,), replace=False)
+        w = jax.random.dirichlet(k_w, jnp.ones((branching,), jnp.float32))
+        return jnp.zeros((n_states,), jnp.float32).at[idx].add(w)
+
+    rows = jax.vmap(one_row)(jax.random.split(kp, n_states * n_actions))
+    P = rows.reshape(n_states, n_actions, n_states)
+    loss = jax.random.uniform(kl, (n_states, n_actions), jnp.float32)
+    rho = jax.random.dirichlet(kr, jnp.ones((n_states,), jnp.float32))
+    return TabularMDP(P=P, l=loss, rho=rho, gamma=gamma, horizon=horizon)
+
+
+def _pack_tabular(envs: Sequence[TabularMDP]) -> Dict[str, np.ndarray]:
+    """Stack the P/l/rho tables (same (S, A) shape — guaranteed by the kind
+    tag) into arrays with a leading lane axis.  ``gamma``/``horizon`` are
+    run metadata (rollouts use ``FedPGConfig``'s), not lane parameters."""
+    return {
+        "P": np.stack([np.asarray(e.P, np.float64) for e in envs]),
+        "l": np.stack([np.asarray(e.l, np.float64) for e in envs]),
+        "rho": np.stack([np.asarray(e.rho, np.float64) for e in envs]),
+    }
+
+
+def _build_tabular(kind: str, proto: TabularMDP, params: Dict[str, Any]):
+    del kind
+    return dataclasses.replace(
+        proto, P=params["P"], l=params["l"], rho=params["rho"]
+    )
+
+
+register_env("tabular", TabularMDP, packer=_pack_tabular, builder=_build_tabular)

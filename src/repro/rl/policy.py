@@ -3,17 +3,22 @@
 ``MLPPolicy`` is the paper's target policy (Section IV): a two-layer network,
 16 hidden ReLU units, softmax output over the discrete action set.
 ``TabularSoftmaxPolicy`` (theta[s, a] logits) pairs with ``TabularMDP`` for
-exact-gradient tests.
+exact-gradient tests.  ``GaussianPolicy`` (linear mean, learnable diagonal
+log-std) opens continuous action spaces — the G(PO)MDP/REINFORCE path only
+needs ``log_prob`` and ``sample``, so LQR-style tasks ride the same
+estimators and federated loops unchanged.
 
 All policies expose the same pure-function interface over a params pytree:
     init(key)               -> params
-    logits(params, obs)     -> (n_actions,)
     log_prob(params, obs, a)-> scalar
-    sample(params, key, obs)-> action
+    sample(params, key, obs)-> action        (int for discrete, vector else)
+    entropy(params, obs)    -> scalar
+    logits(params, obs)     -> (n_actions,)  [discrete only]
     action_probs(params)    -> (S, A)        [tabular only]
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Dict
 
@@ -83,3 +88,51 @@ class TabularSoftmaxPolicy:
     def action_probs(self, params: PyTree) -> jax.Array:
         """(S, A) table — feeds TabularMDP.exact_J for exact gradients."""
         return jax.nn.softmax(params["theta"], axis=-1)
+
+
+@dataclass(frozen=True)
+class GaussianPolicy:
+    """Diagonal Gaussian over continuous actions: a ~ N(W obs + b, e^{2s}).
+
+    The mean is linear in the observation and the per-dimension log-std
+    ``s`` is a learnable parameter vector, so the policy covers the LQR
+    setting (linear state feedback + exploration noise) while staying a
+    plain params-pytree pure-function policy.
+    """
+
+    obs_dim: int = 2
+    act_dim: int = 2
+    init_scale: float = 0.1
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        return {
+            "w": self.init_scale
+            * jax.random.normal(key, (self.obs_dim, self.act_dim), jnp.float32)
+            / jnp.sqrt(float(self.obs_dim)),
+            "b": jnp.zeros((self.act_dim,), jnp.float32),
+            "log_std": jnp.zeros((self.act_dim,), jnp.float32),
+        }
+
+    def mean(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        return obs @ params["w"] + params["b"]
+
+    def log_prob(self, params: PyTree, obs: jax.Array, action: jax.Array) -> jax.Array:
+        mu, log_std = self.mean(params, obs), params["log_std"]
+        z = (action - mu) * jnp.exp(-log_std)
+        return (
+            -0.5 * jnp.sum(z * z)
+            - jnp.sum(log_std)
+            - 0.5 * self.act_dim * math.log(2.0 * math.pi)
+        )
+
+    def sample(self, params: PyTree, key: jax.Array, obs: jax.Array) -> jax.Array:
+        eps = jax.random.normal(key, (self.act_dim,), jnp.float32)
+        return self.mean(params, obs) + jnp.exp(params["log_std"]) * eps
+
+    def entropy(self, params: PyTree, obs: jax.Array) -> jax.Array:
+        """Closed form: sum(log_std) + (d/2)(1 + log 2 pi); obs-independent
+        (kept in the signature for interface parity)."""
+        del obs
+        return jnp.sum(params["log_std"]) + 0.5 * self.act_dim * (
+            1.0 + math.log(2.0 * math.pi)
+        )

@@ -19,7 +19,7 @@ class Trajectory(NamedTuple):
     """One rollout: arrays are time-major (T+1, ...)."""
 
     obs: jax.Array      # (T+1, obs_dim) — state the action was taken in
-    actions: jax.Array  # (T+1,)
+    actions: jax.Array  # (T+1,) discrete; (T+1, act_dim) continuous policies
     losses: jax.Array   # (T+1,)  l(s_t, a_t)
 
     @property

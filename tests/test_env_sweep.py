@@ -1,0 +1,385 @@
+"""Env-axis sweeps: registry round-trip, one-compile-per-partition over env
+families, and bit-identical lanes vs per-scenario ``fedpg.monte_carlo`` when
+a continuous env parameter varies — the same exactness contract the channel
+axis is held to in ``test_sweep.py``."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import event_triggered, fedpg
+from repro.core.channel import RayleighChannel
+from repro.core.event_triggered import ETConfig
+from repro.core.sweep import (
+    Scenario, grid, partition_scenarios, resolve_env_policy, sweep,
+)
+from repro.rl.env import LandmarkNav
+from repro.rl.envs import (
+    CliffWalk, LQRTask, MultiLandmarkNav, WindyLandmarkNav,
+    batched_env_arrays, build_lane_env, env_kind, garnet,
+    make_env, make_heterogeneous_env, register_env,
+)
+
+SMALL = dict(n_agents=3, batch_m=2, horizon=6, n_rounds=4, debias=True)
+
+
+def _hist_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip():
+    assert env_kind(LandmarkNav()) == "landmark"
+    assert env_kind(WindyLandmarkNav()) == "windy"
+    assert env_kind(MultiLandmarkNav(n_landmarks=4)) == "multilandmark:4"
+    assert env_kind(CliffWalk(width=5, height=3)) == "cliffwalk:5x3"
+    assert env_kind(LQRTask(dim=3)) == "lqr:3"
+    assert env_kind(garnet(jax.random.key(0), 5, 2)) == "tabular:5x2"
+    e = make_env("cliffwalk", width=7)
+    assert isinstance(e, CliffWalk) and e.width == 7
+    with pytest.raises(ValueError, match="unknown environment"):
+        make_env("nope")
+    with pytest.raises(ValueError, match="not in the registry"):
+        env_kind(object())
+
+
+def test_register_env_extension_point():
+    import dataclasses as dc
+
+    @dc.dataclass(frozen=True)
+    class Custom(LandmarkNav):
+        pull: float = 0.5
+
+    register_env("custom_test_env", Custom)
+    assert env_kind(Custom()) == "custom_test_env"
+    kind, arrays = batched_env_arrays([Custom(pull=0.1), Custom(pull=0.9)])
+    assert kind == "custom_test_env" and set(arrays) == {"pull"}
+    lane = build_lane_env(kind, Custom(), {"pull": 0.9})
+    assert isinstance(lane, Custom) and lane.pull == 0.9
+
+
+def test_batched_env_arrays_contract():
+    # only varying float fields pack; constants stay closed-over literals
+    kind, arrays = batched_env_arrays(
+        [WindyLandmarkNav(wind=0.0), WindyLandmarkNav(wind=0.1)])
+    assert kind == "windy" and set(arrays) == {"wind"}
+    np.testing.assert_allclose(arrays["wind"], [0.0, 0.1])
+    # declared-float fields accept int literals (schema, not value, decides)
+    kind, arrays = batched_env_arrays(
+        [WindyLandmarkNav(wind=0), WindyLandmarkNav(wind=1)])
+    np.testing.assert_allclose(arrays["wind"], [0.0, 1.0])
+    with pytest.raises(ValueError, match="cannot batch"):
+        batched_env_arrays([LandmarkNav(), WindyLandmarkNav()])
+    # non-float (structural) fields may not vary inside one kind
+    with pytest.raises(ValueError, match="structural"):
+        batched_env_arrays([LandmarkNav(n_actions=5), LandmarkNav(n_actions=4)])
+    # garnet tables stack through the tabular packer hook
+    ms = [garnet(jax.random.key(i), 4, 2, branching=2) for i in range(2)]
+    kind, arrays = batched_env_arrays(ms)
+    assert kind == "tabular:4x2"
+    assert arrays["P"].shape == (2, 4, 2, 4)
+    assert arrays["l"].shape == (2, 4, 2)
+    assert arrays["rho"].shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# partitioning + one compile per env-family partition
+# ---------------------------------------------------------------------------
+
+def test_env_family_is_structural():
+    scens = grid(
+        env=[WindyLandmarkNav(wind=0.0), WindyLandmarkNav(wind=0.1),
+             CliffWalk(width=4, height=3)],
+        channel=RayleighChannel(), **SMALL,
+    )
+    parts = partition_scenarios(scens)
+    assert len(parts) == 2  # wind lanes batch; cliffwalk splits
+    # structural env sizes split within a family
+    scens = grid(env=[MultiLandmarkNav(n_landmarks=2),
+                      MultiLandmarkNav(n_landmarks=3)], **SMALL)
+    assert len(partition_scenarios(scens)) == 2
+    # default-env scenarios and env-carrying scenarios don't mix
+    scens = [Scenario(channel=None, **SMALL),
+             Scenario(channel=None, env=LandmarkNav(), **SMALL)]
+    assert len(partition_scenarios(scens)) == 2
+
+
+def test_two_env_families_compile_once_each(compile_counter):
+    env_a = WindyLandmarkNav(wind=0.05)
+    env_b = CliffWalk(width=4, height=3, slip=0.1)
+    scens = grid(env=[env_a, env_b], channel=RayleighChannel(),
+                 noise_sigma=1e-3, **SMALL)
+    key = jax.random.key(0)
+    jax.random.split(key, 2)  # warm tiny eager helpers out of the counters
+    fedpg.clear_compilation_cache()
+    with compile_counter() as c_naive:
+        naive = [
+            fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key,
+                              2, ota=s.ota_config())
+            for s in scens
+        ]
+    with compile_counter() as c_sweep:
+        res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 2
+    for i in range(len(scens)):
+        assert _hist_equal(naive[i], res.scenario_history(i)), scens[i]
+    assert c_sweep.count <= c_naive.count, (c_sweep.count, c_naive.count)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical lanes for a varying continuous env parameter
+# ---------------------------------------------------------------------------
+
+def test_env_param_axis_bitwise_vs_monte_carlo(compile_counter):
+    """A wind axis batches into ONE program whose lanes equal the
+    per-scenario path bit-for-bit under the same PRNG keys."""
+    scens = grid(
+        env=[WindyLandmarkNav(wind=w) for w in (0.0, 0.05, 0.1)],
+        channel=RayleighChannel(), noise_sigma=1e-3, **SMALL,
+    )
+    key = jax.random.key(5)
+    # warm the per-shape eager helpers (f32 packing converts, result
+    # unstacking slices) so the counters compare lane programs, not
+    # cold-start scaffolding — same trick as test_sweep.py
+    sweep(None, None, scens, key, 2)
+    fedpg.clear_compilation_cache()
+    with compile_counter() as c_naive:
+        naive = [
+            fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key,
+                              2, ota=s.ota_config())
+            for s in scens
+        ]
+    with compile_counter() as c_sweep:
+        res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 1
+    assert c_sweep.count < c_naive.count, (c_sweep.count, c_naive.count)
+    for i in range(len(scens)):
+        assert _hist_equal(naive[i], res.scenario_history(i)), scens[i]
+
+
+def test_garnet_table_lanes_bitwise(compile_counter):
+    """Whole Garnet P/l/rho tables batch as lanes (array-valued packer)."""
+    ms = [garnet(jax.random.key(i), 4, 2, branching=2) for i in range(3)]
+    scens = grid(env=ms, channel=RayleighChannel(), **SMALL)
+    key = jax.random.key(7)
+    res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 1
+    for i, s in enumerate(scens):
+        ref = fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key,
+                                2, ota=s.ota_config())
+        assert _hist_equal(ref, res.scenario_history(i))
+    # env identity lands in the result table
+    rows = res.to_dicts(tail=2)
+    assert rows[0]["env"] == "tabular:4x2"
+    assert res.index(env=ms[1]) == 1
+
+
+def test_default_env_scenarios_unchanged():
+    """Scenarios without an env keep the pre-env-zoo behaviour: sweep's
+    positional (env, policy) is used and lanes match monte_carlo."""
+    env, pol = LandmarkNav(), LandmarkNav().default_policy()
+    s = Scenario(channel=RayleighChannel(), **SMALL)
+    key = jax.random.key(2)
+    res = sweep(env, pol, [s], key, 2)
+    ref = fedpg.monte_carlo(env, pol, s.fedpg_config(), key, 2,
+                            ota=s.ota_config())
+    assert _hist_equal(ref, res.scenario_history(0))
+    assert res.to_dicts(tail=2)[0]["env"] == "default"
+    with pytest.raises(ValueError, match="no env"):
+        sweep(None, None, [s], key, 2)
+
+
+def test_scenario_policy_override():
+    from repro.rl.policy import MLPPolicy
+
+    wide = MLPPolicy(obs_dim=4, hidden=8, n_actions=5)
+    s = Scenario(env=LandmarkNav(), policy=wide, channel=None, **SMALL)
+    assert resolve_env_policy(s)[1] is wide
+    res = sweep(None, None, [s], jax.random.key(0), 2)
+    assert res.to_dicts(tail=2)[0]["policy"] == "MLPPolicy"
+
+
+def test_unhashable_policies_split_partitions():
+    """Distinct unhashable policy instances must NOT merge into one
+    partition (they would silently all run the prototype's policy)."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.rl.policy import MLPPolicy
+
+    @dc.dataclass(frozen=True)
+    class BiasedMLP(MLPPolicy):
+        # an array field makes the policy unhashable
+        logit_bias: jnp.ndarray = None  # type: ignore[assignment]
+
+        def logits(self, params, obs):
+            return super().logits(params, obs) + self.logit_bias
+
+    flat = BiasedMLP(logit_bias=jnp.zeros((5,)))
+    skew = BiasedMLP(logit_bias=jnp.array([5.0, 0.0, 0.0, 0.0, -5.0]))
+    scens = [Scenario(env=LandmarkNav(), policy=flat, channel=None, **SMALL),
+             Scenario(env=LandmarkNav(), policy=skew, channel=None, **SMALL)]
+    res = sweep(None, None, scens, jax.random.key(0), 2)
+    assert res.n_partitions == 2
+    assert not np.array_equal(np.asarray(res.history.rewards[0]),
+                              np.asarray(res.history.rewards[1]))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous agents through fedpg / event_triggered / sweep
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_env_runs_in_sweep_and_fedpg():
+    het = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=0.03 * i) for i in range(SMALL["n_agents"])]
+    )
+    s = Scenario(env=het, channel=RayleighChannel(), noise_sigma=1e-3, **SMALL)
+    key = jax.random.key(3)
+    res = sweep(None, None, [s], key, 2)
+    ref = fedpg.monte_carlo(het, het.default_policy(), s.fedpg_config(), key,
+                            2, ota=s.ota_config())
+    assert _hist_equal(ref, res.scenario_history(0))
+    assert res.to_dicts(tail=2)[0]["env"] == f"hetero:windy:{SMALL['n_agents']}"
+
+
+def test_heterogeneous_dynamics_actually_differ_per_agent():
+    """An extreme-wind fleet must behave differently from a calm plain env —
+    the per-agent vmap really threads different dynamics."""
+    calm = WindyLandmarkNav(wind=0.0, gust_sigma=0.0)
+    fleet = make_heterogeneous_env(
+        [calm, WindyLandmarkNav(wind=5.0, gust_sigma=0.0),
+         WindyLandmarkNav(wind=-5.0, gust_sigma=0.0)]
+    )
+    cfg = fedpg.FedPGConfig(n_agents=3, batch_m=2, horizon=6, n_rounds=3)
+    pol = calm.default_policy()
+    key = jax.random.key(0)
+    _, hist_fleet = fedpg.run(fleet, pol, cfg, key)
+    _, hist_plain = fedpg.run(calm, pol, cfg, key)
+    assert not np.allclose(np.asarray(hist_fleet.rewards),
+                           np.asarray(hist_plain.rewards))
+    # all-equal fleet == plain env, bit for bit (same lanes, shared consts)
+    degenerate = make_heterogeneous_env([calm, calm, calm])
+    _, hist_deg = fedpg.run(degenerate, pol, cfg, key)
+    assert _hist_equal(hist_deg, hist_plain)
+
+
+def test_heterogeneous_agent_count_guard_in_loops():
+    het = make_heterogeneous_env([WindyLandmarkNav(wind=w) for w in (0.0, 0.1)])
+    cfg = fedpg.FedPGConfig(n_agents=4, batch_m=2, horizon=4, n_rounds=2)
+    pol = het.default_policy()
+    with pytest.raises(ValueError, match="n_agents=2"):
+        fedpg.run(het, pol, cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="n_agents=2"):
+        event_triggered.run(het, pol, cfg, ETConfig(), jax.random.key(0))
+    with pytest.raises(ValueError, match="n_agents=2"):
+        sweep(None, None,
+              [Scenario(env=het, channel=None, n_agents=4, batch_m=2,
+                        horizon=4, n_rounds=2)],
+              jax.random.key(0), 2)
+
+
+def test_two_fleets_batch_as_lanes():
+    """Two same-shape HeterogeneousEnv fleets (mild vs extreme per-agent
+    winds) share one partition and batch through the hetero packer; each
+    lane matches running that fleet directly."""
+    n = SMALL["n_agents"]
+    mild = make_heterogeneous_env([WindyLandmarkNav(wind=0.01 * i)
+                                   for i in range(n)])
+    wild = make_heterogeneous_env([WindyLandmarkNav(wind=0.05 * i)
+                                   for i in range(n)])
+    scens = grid(env=[mild, wild], channel=RayleighChannel(), **SMALL)
+    key = jax.random.key(6)
+    res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 1
+    for i, fleet in enumerate((mild, wild)):
+        ref = fedpg.monte_carlo(fleet, fleet.default_policy(),
+                                scens[i].fedpg_config(), key, 2,
+                                ota=scens[i].ota_config())
+        assert _hist_equal(ref, res.scenario_history(i))
+    # fleets stacking different field sets are a clear error, not a crash
+    # (same base as `mild`: first member is the all-defaults wind=0.0 env)
+    odd = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=0.0, gust_sigma=0.02 * (i + 1))
+         for i in range(n)])
+    with pytest.raises(ValueError, match="different .*fields"):
+        sweep(None, None, grid(env=[mild, odd], channel=RayleighChannel(),
+                               **SMALL), key, 2)
+    # and so are fleets whose bases differ in a NON-stacked field
+    shifted = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=0.01 * i, arena=2.0) for i in range(n)])
+    with pytest.raises(ValueError, match="non-stacked field"):
+        sweep(None, None, grid(env=[mild, shifted], channel=RayleighChannel(),
+                               **SMALL), key, 2)
+
+
+def test_fleets_differing_only_in_stacked_fields_batch():
+    """Base values of stacked fields are irrelevant (always overridden per
+    agent), so fleets whose *first members* differ in a stacked field must
+    still batch."""
+    n = SMALL["n_agents"]
+    a = make_heterogeneous_env([WindyLandmarkNav(wind=0.01 * (i + 1))
+                                for i in range(n)])
+    b = make_heterogeneous_env([WindyLandmarkNav(wind=0.04 * (i + 1))
+                                for i in range(n)])
+    key = jax.random.key(8)
+    scens = grid(env=[a, b], channel=None, **SMALL)
+    res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 1
+    for i, fleet in enumerate((a, b)):
+        ref = fedpg.monte_carlo(fleet, fleet.default_policy(),
+                                scens[i].fedpg_config(), key, 2, ota=None)
+        assert _hist_equal(ref, res.scenario_history(i))
+
+
+def test_identity_distinct_equal_fleets_share_one_lane():
+    """Two separately-built all-equal fleets pack to zero varying fields;
+    the partition must take the replicate-one-lane path, not crash on a
+    zero-leaf vmap."""
+    n = SMALL["n_agents"]
+    calm = WindyLandmarkNav(wind=0.0, gust_sigma=0.0)
+    f1 = make_heterogeneous_env([calm] * n)
+    f2 = make_heterogeneous_env([calm] * n)
+    res = sweep(None, None, grid(env=[f1, f2], channel=None, **SMALL),
+                jax.random.key(9), 2)
+    assert res.n_partitions == 1
+    assert _hist_equal(res.scenario_history(0), res.scenario_history(1))
+
+
+def test_event_triggered_heterogeneous():
+    het = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=0.05 * i) for i in range(3)]
+    )
+    cfg = fedpg.FedPGConfig(n_agents=3, batch_m=2, horizon=5, n_rounds=3)
+    _, hist = event_triggered.run(het, het.default_policy(), cfg, ETConfig(),
+                                  jax.random.key(0))
+    assert hist.rewards.shape == (3,)
+    assert bool(np.all(np.isfinite(np.asarray(hist.rewards))))
+    assert float(np.max(np.asarray(hist.uploads))) <= 3
+
+
+# ---------------------------------------------------------------------------
+# LQR (continuous actions) through the engine
+# ---------------------------------------------------------------------------
+
+def test_lqr_scenario_through_sweep():
+    """LQR lanes batch like any family; its matvec/quadratic-loss fusions
+    may reassociate when a traced parameter is present, so (documented in
+    the sweep module) equality is to the last-bit tolerance rather than
+    bitwise — unlike the elementwise-dynamics families above."""
+    scens = grid(env=[LQRTask(process_sigma=0.0), LQRTask(process_sigma=0.1)],
+                 channel=None, **SMALL)
+    key = jax.random.key(4)
+    res = sweep(None, None, scens, key, 2)
+    assert res.n_partitions == 1  # process_sigma is a lane parameter
+    for i, s in enumerate(scens):
+        ref = fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key,
+                                2, ota=s.ota_config())
+        got = res.scenario_history(i)
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)

@@ -1,0 +1,279 @@
+"""Environment zoo: dynamics semantics, the Garnet generator's exact-gradient
+anchoring of the estimators, GaussianPolicy, the heterogeneous wrapper, and
+the horizon-correct l_bar envelope threading into theory."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gpomdp, theory
+from repro.rl.env import LandmarkNav, TabularMDP
+from repro.rl.envs import (
+    CliffWalk, HeterogeneousEnv, LQRTask, MultiLandmarkNav, WindyLandmarkNav,
+    check_agent_count, garnet, make_heterogeneous_env,
+)
+from repro.rl.policy import GaussianPolicy
+from repro.rl.sampler import rollout, rollout_batch
+from repro.utils.tree import tree_global_norm, tree_sub
+
+
+# ---------------------------------------------------------------------------
+# particle variants
+# ---------------------------------------------------------------------------
+
+def test_windy_reduces_to_landmark_when_calm():
+    """wind=0, gust_sigma=0 must reproduce LandmarkNav bit-for-bit."""
+    base, windy = LandmarkNav(), WindyLandmarkNav(wind=0.0, gust_sigma=0.0)
+    pol = base.default_policy()
+    theta = pol.init(jax.random.key(0))
+    t1 = jax.jit(lambda: rollout(base, pol, theta, jax.random.key(1), 8))()
+    t2 = jax.jit(lambda: rollout(windy, pol, theta, jax.random.key(1), 8))()
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_windy_drift_moves_the_agent():
+    env = WindyLandmarkNav(wind=0.5, gust_sigma=0.0)
+    state = jnp.zeros((4,))
+    nxt, _ = env.step(jax.random.key(0), state, jnp.asarray(0))  # "stay"
+    assert float(nxt[0]) == pytest.approx(0.5)  # +x drift despite staying
+    assert float(nxt[1]) == pytest.approx(0.0)
+
+
+def test_multilandmark_loss_is_nearest():
+    env = MultiLandmarkNav(n_landmarks=2)
+    # pos (0,0); landmarks at (1,0) and (0.2, 0)
+    state = jnp.array([0.0, 0.0, 1.0, 0.0, 0.2, 0.0])
+    assert float(env.loss(state)) == pytest.approx(0.2, rel=1e-4)
+    assert env.obs_dim == 6
+    assert env.default_policy().obs_dim == 6
+
+
+# ---------------------------------------------------------------------------
+# cliff walk
+# ---------------------------------------------------------------------------
+
+def test_cliffwalk_semantics():
+    env = CliffWalk(width=4, height=3, slip=0.0)
+    key = jax.random.key(0)
+    s = env.reset(key)
+    assert int(jnp.argmax(s)) == env.start_state
+    # stepping right from start lands in the cliff: cost + teleport home
+    nxt, loss = env.step(key, s, jnp.asarray(3))
+    assert float(loss) == pytest.approx(env.cliff_cost)
+    assert int(jnp.argmax(nxt)) == env.start_state
+    # up is safe: step cost
+    nxt, loss = env.step(key, s, jnp.asarray(0))
+    assert float(loss) == pytest.approx(env.step_cost)
+    assert int(jnp.argmax(nxt)) == env.width  # (0, 1)
+    # goal is absorbing with zero loss
+    goal = jax.nn.one_hot(env.goal_state, env.obs_dim)
+    nxt, loss = env.step(key, goal, jnp.asarray(1))
+    assert float(loss) == 0.0
+    assert int(jnp.argmax(nxt)) == env.goal_state
+    # walls clamp
+    nxt, _ = env.step(key, s, jnp.asarray(2))  # left from (0,0)
+    assert int(jnp.argmax(nxt)) == env.start_state
+
+
+def test_cliffwalk_slip_randomises_actions():
+    env = CliffWalk(width=4, height=3, slip=1.0)
+    s = env.reset(jax.random.key(0))
+    cells = {
+        int(jnp.argmax(env.step(jax.random.key(i), s, jnp.asarray(0))[0]))
+        for i in range(32)
+    }
+    assert len(cells) > 1  # full slip: the chosen action is irrelevant
+
+
+# ---------------------------------------------------------------------------
+# LQR + GaussianPolicy
+# ---------------------------------------------------------------------------
+
+def test_gaussian_policy_log_prob_and_entropy():
+    pol = GaussianPolicy(obs_dim=3, act_dim=2)
+    params = pol.init(jax.random.key(0))
+    obs = jnp.array([0.3, -0.1, 0.7])
+    act = jnp.array([0.5, -0.2])
+    mu = np.asarray(pol.mean(params, obs))
+    std = np.exp(np.asarray(params["log_std"]))
+    expect = sum(
+        -0.5 * ((float(act[i]) - mu[i]) / std[i]) ** 2
+        - math.log(std[i]) - 0.5 * math.log(2 * math.pi)
+        for i in range(2)
+    )
+    assert float(pol.log_prob(params, obs, act)) == pytest.approx(expect, rel=1e-5)
+    # closed-form diagonal-Gaussian entropy
+    expect_h = float(np.sum(np.log(std))) + 0.5 * 2 * (1 + math.log(2 * math.pi))
+    assert float(pol.entropy(params, obs)) == pytest.approx(expect_h, rel=1e-5)
+    # sampling statistics match the parameterisation
+    keys = jax.random.split(jax.random.key(1), 4000)
+    acts = jax.vmap(lambda k: pol.sample(params, k, obs))(keys)
+    np.testing.assert_allclose(np.mean(np.asarray(acts), 0), mu, atol=0.08)
+    np.testing.assert_allclose(np.std(np.asarray(acts), 0), std, atol=0.08)
+
+
+def test_lqr_rollout_and_gpomdp_finite():
+    """Continuous actions run the full estimator path (vector-action
+    log-prob flattening in gpomdp._traj_logps)."""
+    env = LQRTask(dim=2)
+    pol = env.default_policy()
+    theta = pol.init(jax.random.key(0))
+    traj = jax.jit(
+        lambda: rollout_batch(env, pol, theta, jax.random.key(1), 6, 8)
+    )()
+    assert traj.actions.shape == (8, 7, 2)  # (batch, T+1, act_dim)
+    assert traj.losses.shape == (8, 7)
+    assert bool(jnp.all(jnp.isfinite(traj.losses)))
+    g = gpomdp.gpomdp_gradient(pol, theta, traj, 0.95)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+    assert float(tree_global_norm(g)) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Garnet generator + estimator anchoring (exact_J autodiff)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def garnet_setup():
+    mdp = garnet(jax.random.key(0), n_states=4, n_actions=2, branching=2,
+                 gamma=0.9, horizon=3)
+    pol = mdp.default_policy()
+    theta = pol.init(jax.random.key(1))
+    return mdp, pol, theta
+
+
+def test_garnet_is_a_valid_mdp(garnet_setup):
+    mdp, _, _ = garnet_setup
+    P = np.asarray(mdp.P)
+    np.testing.assert_allclose(P.sum(-1), 1.0, rtol=1e-5)
+    assert P.min() >= 0.0
+    # branching-sparse: each (s, a) row reaches at most `branching` states
+    assert (P > 1e-9).sum(-1).max() <= 2
+    np.testing.assert_allclose(np.asarray(mdp.rho).sum(), 1.0, rtol=1e-5)
+    with pytest.raises(ValueError, match="branching"):
+        garnet(jax.random.key(0), n_states=3, branching=9)
+
+
+@pytest.mark.parametrize("grad_fn,tol", [
+    (gpomdp.gpomdp_gradient, 0.08),
+    (gpomdp.reinforce_gradient, 0.12),
+])
+def test_estimators_unbiased_on_garnet(garnet_setup, grad_fn, tol):
+    """G(PO)MDP / REINFORCE must match the exact autodiff gradient of the
+    Garnet MDP's J(theta) — the generator exists to anchor estimators on
+    instances the seed's hand-rolled random() never produces."""
+    mdp, pol, theta = garnet_setup
+    g_exact = jax.grad(lambda p: mdp.exact_J(pol.action_probs(p)))(theta)
+
+    @jax.jit
+    def est(k):
+        traj = rollout_batch(mdp, pol, theta, k, mdp.horizon, 1024)
+        return grad_fn(pol, theta, traj, mdp.gamma)
+
+    gs = jax.vmap(est)(jax.random.split(jax.random.key(2), 30))
+    g_mean = jax.tree.map(lambda x: jnp.mean(x, 0), gs)
+    rel = float(
+        tree_global_norm(tree_sub(g_mean, g_exact)) / tree_global_norm(g_exact)
+    )
+    assert rel < tol, f"relative bias {rel}"
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous wrapper
+# ---------------------------------------------------------------------------
+
+def test_make_heterogeneous_env_stacks_varying_floats():
+    envs = [WindyLandmarkNav(wind=0.02 * i) for i in range(3)]
+    het = make_heterogeneous_env(envs)
+    assert isinstance(het, HeterogeneousEnv) and het.n_agents == 3
+    assert set(het.params) == {"wind"}  # constant fields stay on the base
+    np.testing.assert_allclose(np.asarray(het.params["wind"]),
+                               [0.0, 0.02, 0.04], rtol=1e-6)
+    m = het.member(2)
+    assert isinstance(m, WindyLandmarkNav) and m.wind == pytest.approx(0.04)
+    assert het.kind_tag() == "hetero:windy:3"
+    assert het.default_policy().obs_dim == 4
+
+
+def test_make_heterogeneous_env_accepts_int_literals_in_float_fields():
+    """wind=0 (an int literal in a declared-float field) is a lane value,
+    not a structural field — classification follows the dataclass schema."""
+    het = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=0), WindyLandmarkNav(wind=1)]
+    )
+    np.testing.assert_allclose(np.asarray(het.params["wind"]), [0.0, 1.0])
+
+
+def test_make_heterogeneous_garnet_fleet():
+    """Array-valued fields stack per agent: a fleet of Garnet draws gives
+    every federated agent its own MDP."""
+    from repro.core import fedpg
+
+    ms = [garnet(jax.random.key(i), 4, 2, branching=2) for i in range(3)]
+    het = make_heterogeneous_env(ms)
+    assert set(het.params) == {"P", "l", "rho"}
+    assert het.params["P"].shape == (3, 4, 2, 4)
+    m1 = het.member(1)
+    np.testing.assert_array_equal(np.asarray(m1.P), np.asarray(ms[1].P))
+    cfg = fedpg.FedPGConfig(n_agents=3, batch_m=2, horizon=3, n_rounds=2)
+    _, hist = fedpg.run(het, het.default_policy(), cfg, jax.random.key(0))
+    assert bool(np.all(np.isfinite(np.asarray(hist.rewards))))
+
+
+def test_make_heterogeneous_env_rejects_bad_fleets():
+    with pytest.raises(ValueError, match="empty"):
+        make_heterogeneous_env([])
+    with pytest.raises(ValueError, match="one env family"):
+        make_heterogeneous_env([LandmarkNav(), WindyLandmarkNav()])
+    with pytest.raises(ValueError, match="structural"):
+        make_heterogeneous_env([MultiLandmarkNav(n_landmarks=2),
+                                MultiLandmarkNav(n_landmarks=3)])
+
+
+def test_check_agent_count_guard():
+    het = make_heterogeneous_env([WindyLandmarkNav(wind=w) for w in (0.0, 0.1)])
+    check_agent_count(het, 2)            # matching: fine
+    check_agent_count(LandmarkNav(), 7)  # plain envs: always fine
+    with pytest.raises(ValueError, match="n_agents=2"):
+        check_agent_count(het, 4)
+
+
+# ---------------------------------------------------------------------------
+# l_bar threading (horizon-correct Assumption-1 envelopes)
+# ---------------------------------------------------------------------------
+
+def test_landmark_l_bar_follows_horizon():
+    env = LandmarkNav()
+    # legacy property == the paper's fixed T=20 envelope
+    assert env.l_bar == pytest.approx(env.l_bar_for(20))
+    assert env.l_bar_for(40) > env.l_bar_for(20) > env.l_bar_for(5)
+    # exact closed form: 2 * sqrt(2) * (arena + step*T)
+    assert env.l_bar_for(10) == pytest.approx(2 * math.sqrt(2) * 2.0)
+
+
+def test_theory_constants_for_env_use_actual_horizon():
+    env = LandmarkNav()
+    c10 = theory.constants_for_env(env, horizon=10, gamma=0.99,
+                                   G=math.sqrt(2.0), F=0.5)
+    c40 = theory.constants_for_env(env, horizon=40, gamma=0.99,
+                                   G=math.sqrt(2.0), F=0.5)
+    assert c10.l_bar == pytest.approx(env.l_bar_for(10))
+    assert c40.l_bar > c10.l_bar
+    assert c40.V() > c10.V()  # the bound envelope tracks the horizon
+    # tabular envelopes come straight off the loss table
+    mdp = TabularMDP.random(jax.random.key(0))
+    assert theory.env_l_bar(mdp, 7) == pytest.approx(float(jnp.max(mdp.l)))
+    with pytest.raises(ValueError, match="l_bar"):
+        theory.env_l_bar(object(), 5)
+
+
+def test_windy_l_bar_accounts_for_drift():
+    calm = WindyLandmarkNav(wind=0.0, gust_sigma=0.0)
+    windy = dataclasses.replace(calm, wind=0.2)
+    assert calm.l_bar_for(10) == pytest.approx(LandmarkNav().l_bar_for(10))
+    assert windy.l_bar_for(10) > calm.l_bar_for(10)
+    assert CliffWalk().l_bar_for(99) == pytest.approx(1.0)  # cost-table bound
