@@ -1,0 +1,110 @@
+"""Strong/weak-scaling table for the sharded sweep engine.
+
+Times ONE structural partition's compiled program — the (lanes x mc_runs)
+batch that ``sweep(..., mode="sharded")`` lays across the device mesh — at
+growing device counts (1, 2, 4, ..., all), so compile time is excluded and
+the numbers isolate execution scaling:
+
+* **strong scaling**: a fixed >=8-lane partition on more and more devices
+  (speedup = t_1dev / t_Ndev; the acceptance row
+  ``fig_scaling_speedup_max`` reports the aggregate throughput ratio vs
+  single-device);
+* **weak scaling**: lanes proportional to devices (per-lane throughput
+  should stay ~flat).
+
+Meaningful numbers need real or emulated devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.fig_scaling [--quick]
+
+(on 1 device the table still runs and reports ratio 1.0).  Note emulated
+host devices share the machine's cores, so emulated speedups are bounded by
+physical parallelism, not by 8.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core.channel import RayleighChannel
+from repro.core.distribute import place_partition
+from repro.core.sweep import _make_lane, _pack_partition, grid, partition_scenarios
+from repro.launch.mesh import make_sweep_mesh
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+
+N_AGENTS, BATCH_M, HORIZON = 4, 4, 10
+
+
+def _device_counts(n: int):
+    out, d = [], 1
+    while d < n:
+        out.append(d)
+        d *= 2
+    out.append(n)
+    return out
+
+
+def _partition_program(n_lanes: int, n_rounds: int, mesh):
+    """(jitted, placed_packed, placed_keys) for one n_lanes-wide partition."""
+    scens = grid(
+        channel=RayleighChannel(),
+        noise_sigma=[1e-3 * (i + 1) for i in range(n_lanes)],
+        n_agents=N_AGENTS, batch_m=BATCH_M, horizon=HORIZON,
+        n_rounds=n_rounds, debias=True,
+    )
+    part = partition_scenarios(scens)[0]
+    packed = _pack_partition(part)
+    lane = _make_lane(LandmarkNav(), MLPPolicy(), part)
+    keys = jax.random.split(jax.random.key(0), 2)
+    jitted, placed, keys_p, _ = place_partition(lane, packed, keys, mesh,
+                                                donate=False)
+    return jitted, placed, keys_p
+
+
+def run(n_rounds: int = 60, lanes: int = 16):
+    devices = jax.devices()
+    counts = _device_counts(len(devices))
+    emit("fig_scaling_devices", 0.0,
+         f"available={len(devices)};platform={devices[0].platform}")
+
+    # ---- strong scaling: fixed lanes, growing mesh -----------------------
+    t_by_count = {}
+    for d in counts:
+        mesh = make_sweep_mesh(lane_shards=d, devices=devices[:d])
+        jitted, placed, keys_p = _partition_program(lanes, n_rounds, mesh)
+        t = time_call(jitted, placed, keys_p, warmup=1, iters=3)
+        t_by_count[d] = t
+        emit(f"fig_scaling_strong_d{d}", t,
+             f"lanes={lanes};speedup_vs_1={t_by_count[counts[0]] / t:.3f}")
+
+    # ---- weak scaling: lanes proportional to devices ---------------------
+    for d in counts:
+        mesh = make_sweep_mesh(lane_shards=d, devices=devices[:d])
+        lanes_d = 2 * d
+        jitted, placed, keys_p = _partition_program(lanes_d, n_rounds, mesh)
+        t = time_call(jitted, placed, keys_p, warmup=1, iters=3)
+        emit(f"fig_scaling_weak_d{d}", t,
+             f"lanes={lanes_d};us_per_lane={t / lanes_d:.1f}")
+
+    # ---- the acceptance row: aggregate throughput ratio vs 1 device ------
+    # best multi-device ratio: emulated host devices beyond the physical
+    # core count oversubscribe (d8 on a 2-core runner can lose to d4), so
+    # the honest aggregate claim is the best mesh size the hardware carries
+    multi = {d: t_by_count[1] / t_by_count[d] for d in counts if d > 1}
+    d_best = max(multi, key=multi.get) if multi else 1
+    ratio = multi.get(d_best, 1.0)
+    emit("fig_scaling_speedup_max", t_by_count.get(d_best, t_by_count[1]),
+         f"devices={d_best};lanes={lanes};throughput_ratio={ratio:.3f};"
+         f"pass={bool(not multi or ratio > 1.0)}")
+    return ratio
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_rounds=30 if args.quick else 60, lanes=8 if args.quick else 16)

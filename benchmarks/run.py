@@ -16,7 +16,8 @@ import time
 
 from benchmarks import (  # noqa: E402
     et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
-    fig_env_zoo, fig_power_control, microbench, roofline_table, theory_table,
+    fig_env_zoo, fig_power_control, fig_scaling, microbench, roofline_table,
+    theory_table,
 )
 from benchmarks.common import ROWS, emit
 
@@ -34,6 +35,10 @@ SUITES = {
     "et": lambda quick: et_baseline.run(n_rounds=100 if quick else 200),
     "envs": lambda quick: fig_env_zoo.run(
         n_rounds=40 if quick else 120, mc_runs=2 if quick else 3),
+    # meaningful on a multi-device (or emulated: XLA_FLAGS=
+    # --xla_force_host_platform_device_count=8) mesh; see fig_scaling.py
+    "scaling": lambda quick: fig_scaling.run(
+        n_rounds=30 if quick else 60, lanes=8 if quick else 16),
     "micro": lambda quick: microbench.run(),
     "roofline": lambda quick: roofline_table.run(),
 }

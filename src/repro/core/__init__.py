@@ -40,10 +40,22 @@ Public API:
     theory    — also: env_l_bar/constants_for_env derive the Assumption-1
                 loss envelope from the env at the *actual* horizon
                 (l_bar_for), so bound tables track the configured T.
+    distribute — device-mesh execution layer under sweep(..., mode="sharded"):
+                partition lane/MC axes lay across a ("lane", "mc") mesh via
+                NamedSharding (uneven lane counts padded with masked
+                replicate-lanes), partitions dispatch asynchronously with
+                block_until_ready deferred to SweepResult materialisation,
+                and results stay bit-identical to mode="vmap" (golden-trace
+                + test_distribute harness).  agent_mesh_for builds the
+                ("agents",) mesh for fedpg.run(..., agent_mesh=...), which
+                runs each round's fleet in the production shard_map form
+                (ota.psum_aggregate_stacked) — HeterogeneousEnv stacks and
+                per-agent power control shard with it.
 
 The environment zoo itself (LandmarkNav variants, CliffWalk, LQR, Garnet
 tabular MDPs, HeterogeneousEnv, register_env) lives in ``repro.rl.envs``.
 """
 from repro.core import (  # noqa: F401
-    channel, event_triggered, fedpg, gpomdp, ota, power_control, sweep, theory,
+    channel, distribute, event_triggered, fedpg, gpomdp, ota, power_control,
+    sweep, theory,
 )

@@ -1,0 +1,195 @@
+"""Device-mesh execution for the sweep engine: lanes x MC seeds on a mesh.
+
+``sweep(..., mode="sharded")`` routes every partition program through this
+module (the ROADMAP's sharding/async north-star item wired into the hot
+path):
+
+* the packed lane axis lays across the mesh's ``"lane"`` axis via
+  ``NamedSharding`` — uneven lane counts are padded with *replicate-lanes*
+  (copies of the last real lane) that are masked off when results
+  materialise;
+* Monte-Carlo keys lay across the ``"mc"`` axis whenever ``mc_runs``
+  divides it (otherwise they replicate across that axis);
+* single-lane partitions (nothing packed — the replicate path) shard the
+  MC axis across the *whole* mesh instead, so a lone scenario still uses
+  every device;
+* dispatch is asynchronous: partition programs launch back-to-back and
+  ``block_until_ready`` is deferred until ``SweepResult`` materialisation,
+  so device execution overlaps host-side packing/compilation of later
+  partitions;
+* packed lane arrays are donated to their partition program (they are
+  rebuilt per partition, so the buffers are dead after dispatch) — on
+  accelerator meshes; the CPU backend cannot reuse donated buffers, so
+  donation is skipped there rather than tripping jax's warning.
+
+Exactness contract: sharding only changes data *placement* — a sharded
+partition runs the identical ``vmap`` jaxpr that ``mode="vmap"`` jits, so
+lanes are bit-identical to the default mode (and hence to per-scenario
+``fedpg.monte_carlo``) wherever that mode is bitwise; the padded lanes
+recompute the last real lane and never reach the result.
+``tests/test_distribute.py`` plus the golden-trace suite enforce this on an
+8-device emulated CPU mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+The *agent* axis inside a round is the other shardable dimension: build a
+mesh with :func:`agent_mesh_for` and pass it to
+``fedpg.run(..., agent_mesh=...)`` to run the per-round fleet in its
+production ``shard_map``/``psum_aggregate`` form (see
+``ota.psum_aggregate_stacked``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_agent_mesh, make_sweep_mesh
+
+LANE_AXIS = "lane"
+MC_AXIS = "mc"
+
+__all__ = [
+    "LANE_AXIS", "MC_AXIS", "Placement", "agent_mesh_for",
+    "default_sweep_mesh", "dispatch_partition", "pad_lanes",
+    "place_partition", "plan_placement",
+]
+
+
+def default_sweep_mesh() -> Mesh:
+    """All available devices on the lane axis (``("lane", "mc")`` shaped)."""
+    return make_sweep_mesh()
+
+
+def agent_mesh_for(n_agents: int, devices=None) -> Mesh:
+    """An ``("agents",)`` mesh over the largest device count dividing
+    ``n_agents`` — the mesh ``fedpg.run(..., agent_mesh=...)`` wants."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    while n_agents % n:
+        n -= 1
+    return make_agent_mesh(n, devices)
+
+
+@dataclass(frozen=True)
+class Placement:
+    """How one partition's (lanes x mc_runs) batch lands on the mesh.
+
+    ``n_lanes == 0`` marks the replicate path (no packed arrays: the lane
+    function runs once and the engine replicates its history); ``n_pad``
+    is the number of masked replicate-lanes appended so the lane axis
+    divides the mesh's lane dimension.
+    """
+
+    mesh: Mesh
+    n_lanes: int
+    n_pad: int
+    lane_spec: P
+    key_spec: P
+    out_spec: P
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.size
+
+
+def plan_placement(mesh: Mesh, n_lanes: int, mc_runs: int) -> Placement:
+    """Choose shardings for one partition.
+
+    Lanes shard over ``"lane"``; keys shard over ``"mc"`` when ``mc_runs``
+    divides that axis.  With nothing packed the keys shard over the whole
+    mesh when ``mc_runs`` divides ``mesh.size`` (else everything
+    replicates — a 1-device degenerate placement that still runs).
+    """
+    if LANE_AXIS not in mesh.shape:
+        raise ValueError(
+            f"sweep mesh needs a {LANE_AXIS!r} axis; got {tuple(mesh.axis_names)} "
+            "(build one with launch.mesh.make_sweep_mesh)")
+    lane_d = mesh.shape[LANE_AXIS]
+    mc_d = mesh.shape.get(MC_AXIS, 1)
+    if n_lanes == 0:
+        axes = tuple(mesh.axis_names)
+        key_spec = P(axes) if mesh.size > 1 and mc_runs % mesh.size == 0 else P()
+        return Placement(mesh=mesh, n_lanes=0, n_pad=0, lane_spec=P(),
+                         key_spec=key_spec, out_spec=key_spec)
+    n_pad = -n_lanes % lane_d
+    mc_sharded = mc_d > 1 and mc_runs % mc_d == 0
+    key_spec = P(MC_AXIS) if mc_sharded else P()
+    out_spec = P(LANE_AXIS, MC_AXIS) if mc_sharded else P(LANE_AXIS)
+    return Placement(mesh=mesh, n_lanes=n_lanes, n_pad=n_pad,
+                     lane_spec=P(LANE_AXIS), key_spec=key_spec,
+                     out_spec=out_spec)
+
+
+def pad_lanes(packed: Dict[str, Any], n_pad: int) -> Dict[str, Any]:
+    """Append ``n_pad`` copies of the last lane to every packed leaf.
+
+    Replicate-lanes keep every value finite and every program branch
+    identical to a real lane; the engine masks them off at collection, so
+    they cost device FLOPs but never touch results.
+    """
+    if n_pad == 0:
+        return packed
+    return jax.tree.map(
+        lambda x: jnp.concatenate([x] + [x[-1:]] * n_pad, axis=0), packed)
+
+
+def place_partition(
+    lane_fn,
+    packed: Dict[str, Any],
+    keys: jax.Array,
+    mesh: Mesh,
+    *,
+    donate: bool = True,
+) -> Tuple[Any, Dict[str, Any], jax.Array, Placement]:
+    """Pad, place, and jit one partition program for the mesh.
+
+    Returns ``(jitted, placed_packed, placed_keys, placement)`` without
+    executing — benchmarks warm and time the call themselves (pass
+    ``donate=False`` to re-invoke on the same buffers).
+    """
+    n_lanes = 0
+    leaves = jax.tree.leaves(packed)
+    if leaves:
+        n_lanes = leaves[0].shape[0]
+    # the CPU backend cannot reuse donated buffers (jax warns and ignores
+    # them) — donation only pays on accelerator meshes
+    donate = donate and mesh.devices.flat[0].platform != "cpu"
+    placement = plan_placement(mesh, n_lanes, keys.shape[0])
+    key_sh = NamedSharding(mesh, placement.key_spec)
+    out_sh = NamedSharding(mesh, placement.out_spec)
+    keys_placed = jax.device_put(keys, key_sh)
+    if placement.n_lanes == 0:
+        jitted = jax.jit(lane_fn, in_shardings=(key_sh, key_sh),
+                         out_shardings=out_sh)
+        return jitted, packed, keys_placed, placement
+    lane_sh = NamedSharding(mesh, placement.lane_spec)
+    placed = jax.device_put(pad_lanes(packed, placement.n_pad), lane_sh)
+    jitted = jax.jit(
+        jax.vmap(lane_fn, in_axes=(0, None)),
+        in_shardings=(lane_sh, key_sh),
+        out_shardings=out_sh,
+        donate_argnums=(0,) if donate else (),
+    )
+    return jitted, placed, keys_placed, placement
+
+
+def dispatch_partition(
+    lane_fn,
+    packed: Dict[str, Any],
+    keys: jax.Array,
+    mesh: Mesh,
+    *,
+    donate: bool = True,
+) -> Tuple[Any, Placement]:
+    """Launch one partition on the mesh and return WITHOUT blocking.
+
+    The result's leaves carry a (padded) leading lane axis when
+    ``placement.n_lanes > 0``; the replicate path returns unstacked
+    ``(mc_runs, ...)`` leaves.  Callers slice real lanes / replicate and
+    defer ``block_until_ready`` until they materialise results.
+    """
+    jitted, placed, keys_placed, placement = place_partition(
+        lane_fn, packed, keys, mesh, donate=donate)
+    return jitted(placed, keys_placed), placement

@@ -56,13 +56,38 @@ def _estimator_grad(cfg: FedPGConfig):
     raise ValueError(f"unknown estimator {cfg.estimator!r}")
 
 
-def make_round_fn(env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig]):
+def make_round_fn(
+    env,
+    policy,
+    cfg: FedPGConfig,
+    ota_cfg: Optional[OTAConfig],
+    *,
+    agent_mesh=None,
+    agent_axis: str = "agents",
+):
     """One communication round: (theta, key) -> (theta', metrics).
 
     A ``HeterogeneousEnv`` is unrolled per agent: the agent vmap additionally
     maps over the wrapper's per-agent field stacks, so agent i samples from
     its own dynamics inside the same jitted program.
+
+    ``agent_mesh`` shards the agent axis across a device mesh instead: each
+    shard rolls out its slice of the fleet (``n_agents / axis_size`` agents,
+    per-agent env stacks sliced by ``shard_map``) and the uplink runs through
+    :func:`repro.core.ota.psum_aggregate_stacked` — the production
+    shard_map/psum form, with per-agent power control keyed on global agent
+    indices.  Numerical relationship to the vmapped form: rollouts are
+    identical (same per-agent keys); cross-agent reductions psum in mesh
+    order, so exact-uplink runs and *deterministic* channels (FixedGain,
+    per-agent budgets over it) match to reduction tolerance — but gains of
+    a *stochastic* channel come from the indexed fold_in stream rather than
+    the stacked batched draw, a different random realisation entirely:
+    those histories agree in distribution, not numerically.
     """
+
+    if agent_mesh is not None:
+        return _make_agent_sharded_round_fn(
+            env, policy, cfg, ota_cfg, agent_mesh, agent_axis)
 
     grad_fn = _estimator_grad(cfg)
     hetero = isinstance(env, HeterogeneousEnv)
@@ -99,6 +124,82 @@ def make_round_fn(env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig]):
     return round_fn
 
 
+def _make_agent_sharded_round_fn(
+    env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
+    mesh, axis_name: str,
+):
+    """The agent axis laid across ``mesh[axis_name]`` via shard_map.
+
+    Each shard vmaps over its ``n_local = n_agents / axis_size`` agents;
+    per-agent env stacks and sampling keys enter with ``P(axis_name)`` specs
+    so shard_map hands every shard exactly its fleet slice.  The uplink is
+    the psum form (``psum_aggregate_stacked``); metrics psum local partial
+    sums, so every shard ends the round with identical (replicated) theta
+    and metrics.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.ota import psum_aggregate_stacked
+    from repro.rl.sampler import discounted_return
+
+    grad_fn = _estimator_grad(cfg)
+    hetero = isinstance(env, HeterogeneousEnv)
+    if hetero:
+        check_agent_count(env, cfg.n_agents)
+    if axis_name not in mesh.shape:
+        raise ValueError(
+            f"agent mesh has no axis {axis_name!r}; axes are "
+            f"{tuple(mesh.axis_names)}")
+    n_shards = mesh.shape[axis_name]
+    if cfg.n_agents % n_shards != 0:
+        raise ValueError(
+            f"n_agents={cfg.n_agents} does not divide across the "
+            f"{axis_name!r} mesh axis of size {n_shards}")
+
+    def local_round(theta, agent_keys, lane_stacks, key_chan):
+        # agent_keys/lane_stacks are this shard's (n_local,)-leading slices
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)
+        local_sum = jax.tree.map(lambda g: jnp.sum(g, axis=0), grads)
+        mean_grad = jax.tree.map(
+            lambda s: jax.lax.psum(s, axis_name) / cfg.n_agents, local_sum)
+
+        if ota_cfg is None:
+            update = mean_grad
+            gain_mean = jnp.ones(())
+        else:
+            update, h = psum_aggregate_stacked(
+                ota_cfg, key_chan, grads, (axis_name,),
+                n_agents=cfg.n_agents)
+            gain_mean = jax.lax.psum(jnp.sum(h), axis_name) / cfg.n_agents
+        theta_next = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
+
+        # metrics: psum of local partial sums == the global means
+        r_local = -jnp.sum(discounted_return(trajs.losses, cfg.gamma))
+        reward = jax.lax.psum(r_local, axis_name) / (cfg.n_agents * cfg.batch_m)
+        grad_sq = tree_global_norm_sq(mean_grad)
+        return theta_next, (reward, grad_sq, gain_mean)
+
+    def round_fn(theta: PyTree, key: jax.Array):
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+        lane_stacks = dict(env.params) if hetero else {}
+        stack_specs = jax.tree.map(lambda _: P(axis_name), lane_stacks)
+        return shard_map(
+            local_round, mesh=mesh,
+            in_specs=(P(), P(axis_name), stack_specs, P()),
+            out_specs=(P(), (P(), P(), P())),
+            check_rep=False,
+        )(theta, agent_keys, lane_stacks, key_chan)
+
+    return round_fn
+
+
 def run(
     env,
     policy,
@@ -107,15 +208,20 @@ def run(
     *,
     ota: Optional[OTAConfig] = None,
     theta0: Optional[PyTree] = None,
+    agent_mesh=None,
+    agent_axis: str = "agents",
 ):
     """Run K rounds; returns (theta_K, History).
 
     ``ota=None`` is Algorithm 1 (exact aggregation); an ``OTAConfig`` is
-    Algorithm 2 over the configured channel.
+    Algorithm 2 over the configured channel.  ``agent_mesh`` shards the
+    agent axis across a device mesh (see :func:`make_round_fn`) — use
+    ``repro.core.distribute.agent_mesh_for`` to build one.
     """
     key_init, key_scan = jax.random.split(key)
     theta = policy.init(key_init) if theta0 is None else theta0
-    round_fn = make_round_fn(env, policy, cfg, ota)
+    round_fn = make_round_fn(env, policy, cfg, ota,
+                             agent_mesh=agent_mesh, agent_axis=agent_axis)
 
     def body(carry, key_k):
         theta = carry

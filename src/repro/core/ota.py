@@ -51,6 +51,18 @@ def _noise_enabled(sigma: Scalar) -> bool:
     return True
 
 
+def _axis_size(name: str) -> Scalar:
+    """Mesh-axis size inside shard_map.  ``jax.lax.axis_size`` only exists on
+    newer jax; the pinned 0.4.x falls back to a psum of ones — a *traced*
+    count, so callers that need a static agent count (per-agent power-control
+    moments, float64-folded scales) must pass one explicitly (see the
+    ``n_agents`` kwarg on :func:`psum_aggregate` /
+    :func:`psum_aggregate_stacked`)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(jnp.ones((), jnp.int32), name)
+
+
 @dataclass(frozen=True)
 class OTAConfig:
     """Static configuration of the over-the-air uplink.
@@ -141,6 +153,26 @@ def sample_gains(cfg: OTAConfig, key: jax.Array, n_agents: int) -> jax.Array:
     return c
 
 
+def _server_epilogue(
+    cfg: OTAConfig,
+    key_n: jax.Array,
+    v: PyTree,
+    n_total: Scalar,
+    n_agents: Optional[int],
+) -> PyTree:
+    """The shared server-side tail of every aggregation form: AWGN on the
+    summed signal, then the update normalisation ``update_scale`` or
+    ``1 / (n_total * norm_const)``.  One copy keeps the three
+    equivalence-tested forms from drifting apart."""
+    if _noise_enabled(cfg.noise_sigma):
+        noise = tree_normal_like(key_n, v, cfg.noise_sigma)
+        v = jax.tree.map(jnp.add, v, noise)
+    scale = cfg.update_scale
+    if scale is None:
+        scale = 1.0 / (n_total * cfg.norm_const_for(n_agents))
+    return jax.tree.map(lambda x: x * scale, v)
+
+
 def aggregate_stacked(
     cfg: OTAConfig,
     key: jax.Array,
@@ -162,13 +194,7 @@ def aggregate_stacked(
         return jnp.sum(hb * g, axis=0)
 
     v = jax.tree.map(_combine, grads_stacked)
-    if _noise_enabled(cfg.noise_sigma):
-        noise = tree_normal_like(key_n, v, cfg.noise_sigma)
-        v = jax.tree.map(jnp.add, v, noise)
-    scale = cfg.update_scale
-    if scale is None:
-        scale = 1.0 / (leading * cfg.norm_const_for(leading))
-    return jax.tree.map(lambda x: x * scale, v), h
+    return _server_epilogue(cfg, key_n, v, leading, leading), h
 
 
 def exact_aggregate(grads_stacked: PyTree) -> PyTree:
@@ -180,21 +206,37 @@ def exact_aggregate(grads_stacked: PyTree) -> PyTree:
 # Form 2: shard_map / psum (production data-parallel form).
 # ---------------------------------------------------------------------------
 
-def local_gain(cfg: OTAConfig, key: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+def _flat_axis_index(axis_names: Sequence[str]) -> Tuple[jax.Array, Scalar]:
+    """(flattened shard index, total shard count) over the given mesh axes
+    (row-major, matching the historical ``local_gain`` indexing).  The count
+    is traced on jax versions without ``lax.axis_size``."""
+    idx = jnp.zeros((), jnp.int32)
+    stride: Scalar = 1
+    for name in reversed(tuple(axis_names)):
+        idx = idx + jax.lax.axis_index(name) * stride
+        stride = stride * _axis_size(name)
+    return idx, stride
+
+
+def local_gain(
+    cfg: OTAConfig,
+    key: jax.Array,
+    axis_names: Sequence[str],
+    n_agents: Optional[int] = None,
+) -> jax.Array:
     """Sample this shard's h_{i,k} inside shard_map.
 
     Every shard folds its own agent index into the shared round key, so the
-    gains are independent across agents but reproducible.
+    gains are independent across agents but reproducible.  ``n_agents`` is
+    the static total agent count when the caller knows it (per-agent
+    policies like ``HeterogeneousBudget`` prefer a static count).
     """
-    idx = jnp.zeros((), jnp.int32)
-    stride = 1
-    for name in reversed(tuple(axis_names)):
-        idx = idx + jax.lax.axis_index(name) * stride
-        stride = stride * jax.lax.axis_size(name)
+    idx, stride = _flat_axis_index(axis_names)
     c = cfg.channel.sample(jax.random.fold_in(key, idx), ())
     if cfg.power_control is not None:
         # per-agent policies key the budget on this shard's agent index
-        c = c * cfg.power_control.apply_indexed(c, idx, stride)
+        n = stride if n_agents is None else n_agents
+        c = c * cfg.power_control.apply_indexed(c, idx, n)
     return c
 
 
@@ -203,31 +245,78 @@ def psum_aggregate(
     key: jax.Array,
     local_grad: PyTree,
     axis_names: Sequence[str],
+    *,
+    n_agents: Optional[int] = None,
 ) -> PyTree:
     """OTA aggregation across mesh axes, to be called inside shard_map.
 
     The per-agent gain scaling happens *before* the psum, so OTA adds zero
     communication volume over exact data-parallel aggregation — which is the
-    paper's efficiency claim transplanted to the interconnect.
+    paper's efficiency claim transplanted to the interconnect.  ``n_agents``
+    is the static total agent count when known; without it the count is a
+    traced psum of ones (old jax has no ``lax.axis_size``), which keeps the
+    maths right but means debiased per-agent-policy configs must carry an
+    explicit ``update_scale`` (a traced count cannot key the closed-form
+    effective moments).
     """
     axis_names = tuple(axis_names)
-    n_agents = 1
-    # axis sizes are only known inside shard_map; fold lazily via lax.
     key_h, key_n = jax.random.split(key)
-    h = local_gain(cfg, key_h, axis_names)
+    h = local_gain(cfg, key_h, axis_names, n_agents)
     scaled = jax.tree.map(lambda g: g * h.astype(g.dtype), local_grad)
     v = jax.lax.psum(scaled, axis_names)
-    if _noise_enabled(cfg.noise_sigma):
-        # Same key on every shard => identical noise everywhere, i.e. the
-        # server's single n_k draw without any broadcast collective.
-        noise = tree_normal_like(key_n, v, cfg.noise_sigma)
-        v = jax.tree.map(jnp.add, v, noise)
-    scale = cfg.update_scale
-    if scale is None:
-        for name in axis_names:
-            n_agents = n_agents * jax.lax.axis_size(name)
-        scale = 1.0 / (n_agents * cfg.norm_const_for(n_agents))
-    return jax.tree.map(lambda x: x * scale, v)
+    # Same key_n on every shard => identical noise everywhere, i.e. the
+    # server's single n_k draw without any broadcast collective.
+    n = n_agents
+    if n is None and cfg.update_scale is None:  # only then is the count used
+        n = _flat_axis_index(axis_names)[1]
+    return _server_epilogue(cfg, key_n, v, n, n_agents)
+
+
+def psum_aggregate_stacked(
+    cfg: OTAConfig,
+    key: jax.Array,
+    local_grads: PyTree,
+    axis_names: Sequence[str],
+    *,
+    n_agents: Optional[int] = None,
+) -> Tuple[PyTree, jax.Array]:
+    """:func:`psum_aggregate` for shards that each carry a *stack* of agents.
+
+    ``local_grads`` leaves have a leading ``n_local`` axis (this shard's
+    slice of the agent axis).  Gains are drawn exactly like ``local_gain``
+    but keyed on the *global* agent index ``shard_index * n_local + j`` —
+    with one agent per shard the stream is identical to
+    :func:`psum_aggregate`.  Each shard reduces its gain-weighted stack
+    locally, ``psum``s across the mesh axes, and applies the shared AWGN +
+    normalisation once.  This is the agent-axis sharding hook
+    ``fedpg.make_round_fn`` uses, so ``HeterogeneousEnv`` fleets and
+    per-agent power control (``HeterogeneousBudget``) run in their
+    production shard_map form.
+
+    Returns ``(update, h_local)``; ``h_local`` is this shard's (n_local,)
+    gain slice (psum its sum for the global gain mean).
+    """
+    axis_names = tuple(axis_names)
+    n_local = jax.tree.leaves(local_grads)[0].shape[0]
+    key_h, key_n = jax.random.split(key)
+    idx, stride = _flat_axis_index(axis_names)
+    n_total: Scalar = n_agents if n_agents is not None else stride * n_local
+    global_idx = idx * n_local + jnp.arange(n_local, dtype=jnp.int32)
+
+    def gain_for(j):
+        c = cfg.channel.sample(jax.random.fold_in(key_h, j), ())
+        if cfg.power_control is not None:
+            c = c * cfg.power_control.apply_indexed(c, j, n_total)
+        return c
+
+    h = jax.vmap(gain_for)(global_idx)
+
+    def _combine(g):
+        hb = h.reshape((n_local,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.sum(hb * g, axis=0)
+
+    v = jax.lax.psum(jax.tree.map(_combine, local_grads), axis_names)
+    return _server_epilogue(cfg, key_n, v, n_total, n_agents), h
 
 
 # ---------------------------------------------------------------------------

@@ -78,12 +78,17 @@ from repro.rl.envs import check_agent_count as check_env_agent_count
 from repro.rl.envs import default_policy as env_default_policy
 
 # Modes for laying scenarios into the partition program.  ``vmap`` (default)
-# batches lanes into one vectorised computation — fastest, and bit-identical
-# to ``monte_carlo`` whenever the debias normaliser is partition-constant.
-# ``map`` runs the lanes through ``lax.map`` (sequential inside one program);
-# every lane keeps the exact rank of the unbatched path, which is the
-# conservative choice if a platform's batched reductions ever reassociate.
-MODES = ("map", "vmap")
+# batches lanes into one vectorised computation — fastest on one device, and
+# bit-identical to ``monte_carlo`` whenever the debias normaliser is
+# partition-constant.  ``map`` runs the lanes through ``lax.map`` (sequential
+# inside one program); every lane keeps the exact rank of the unbatched path,
+# which is the conservative choice if a platform's batched reductions ever
+# reassociate.  ``sharded`` is the vmap program with its lane/MC axes laid
+# across a device mesh (``repro.core.distribute``): partitions dispatch
+# asynchronously, uneven lane counts pad with masked replicate-lanes, and
+# results stay bit-identical to ``vmap`` — sharding only moves data
+# placement, never the per-lane jaxpr.
+MODES = ("map", "vmap", "sharded")
 
 
 @dataclass(frozen=True)
@@ -451,13 +456,17 @@ class SweepResult:
 
     ``history`` leaves have shape ``(n_scenarios, mc_runs, n_rounds)`` in
     the original scenario order (a 1-D object array of ``(mc_runs, K_i)``
-    arrays when the grid varies ``n_rounds``).
+    arrays when the grid varies ``n_rounds``).  ``mode``/``n_devices``
+    record how the partitions executed (``n_devices > 1`` only for
+    ``mode="sharded"``).
     """
 
     scenarios: List[Scenario]
     history: History
     partitions: List[Partition] = field(default_factory=list)
     mc_runs: int = 0
+    mode: str = "vmap"
+    n_devices: int = 1
 
     @property
     def n_partitions(self) -> int:
@@ -465,8 +474,11 @@ class SweepResult:
 
     def scenario_time_us(self, i: int) -> float:
         """Per-(scenario, MC run) share of the owning partition's wall time
-        (compile + execute) — structurally different scenarios keep
-        distinguishable timings."""
+        — structurally different scenarios keep distinguishable timings.
+        Synchronous modes charge compile + execute; ``sharded`` partitions
+        dispatch asynchronously, so their wall time spans dispatch to
+        results-ready (which for later partitions includes waiting on
+        earlier ones still occupying the mesh)."""
         for part in self.partitions:
             if i in part.indices:
                 return part.wall_time_us / (len(part.indices)
@@ -561,6 +573,7 @@ def sweep(
     mc_runs: int,
     *,
     mode: str = "vmap",
+    mesh: Any = None,
 ) -> SweepResult:
     """Run every scenario x mc_runs, one compiled program per partition.
 
@@ -572,45 +585,80 @@ def sweep(
     ``env``/``policy`` are the defaults for scenarios that don't carry their
     own (see ``Scenario.env``); a grid where every scenario names an env may
     pass ``env=None, policy=None``.
+
+    ``mode="sharded"`` lays each partition's (lanes x mc_runs) batch across
+    a device mesh (``mesh=`` from ``launch.mesh.make_sweep_mesh``, default
+    all devices on the lane axis), dispatches partitions asynchronously and
+    defers ``block_until_ready`` to result materialisation; lanes stay
+    bit-identical to ``mode="vmap"`` (see ``repro.core.distribute``).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    sharded = mode == "sharded"
+    if mesh is not None and not sharded:
+        raise ValueError("mesh= is only meaningful with mode='sharded'")
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("empty scenario list")
     keys = jax.random.split(key, mc_runs)
     parts = partition_scenarios(scenarios)
+    n_devices = 1
+    if sharded:
+        from repro.core import distribute
+        if mesh is None:
+            mesh = distribute.default_sweep_mesh()
+        n_devices = mesh.size
 
     out_rewards: List[Optional[np.ndarray]] = [None] * len(scenarios)
     out_grad_sq: List[Optional[np.ndarray]] = [None] * len(scenarios)
     out_gain: List[Optional[np.ndarray]] = [None] * len(scenarios)
 
+    def collect(part: Partition, stacked: History, lanes: bool) -> None:
+        """Materialise one partition: ONE device->host transfer per leaf,
+        sliced on the host (no per-scenario eager gathers to dispatch or
+        compile).  ``lanes=False`` is the replicate path — every scenario
+        shares the single history; with lanes, trailing padded
+        replicate-lanes (sharded mode) are masked off by the j < n slice."""
+        s_np = jax.tree.map(np.asarray, stacked)
+        for j, idx in enumerate(part.indices):
+            out_rewards[idx] = s_np.rewards[j] if lanes else s_np.rewards
+            out_grad_sq[idx] = s_np.grad_sq[j] if lanes else s_np.grad_sq
+            out_gain[idx] = s_np.gain_mean[j] if lanes else s_np.gain_mean
+
+    pending: List[Tuple[Partition, float, Any, Any]] = []
     for part in parts:
         packed = _pack_partition(part)
         lane = _make_lane(env, policy, part)
-        n = len(part.scenarios)
         t0 = time.perf_counter()
+        if sharded:
+            # async: launch and move on — drained after the loop
+            stacked, placement = distribute.dispatch_partition(
+                lane, packed, keys, mesh)
+            pending.append((part, t0, stacked, placement))
+            continue
         if not packed:
             # Every scenario in the partition is identical: run one lane and
             # replicate its history.
-            hist = jax.jit(lane)({}, keys)
-            hists = [hist] * n
+            stacked, lanes = jax.jit(lane)({}, keys), False
         elif mode == "vmap":
             stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(packed, keys)
-            hists = [jax.tree.map(lambda x, i=i: x[i], stacked)
-                     for i in range(n)]
+            lanes = True
         else:
             stacked = jax.jit(
                 lambda pk, ks: jax.lax.map(lambda p: lane(p, ks), pk)
             )(packed, keys)
-            hists = [jax.tree.map(lambda x, i=i: x[i], stacked)
-                     for i in range(n)]
-        jax.block_until_ready(hists)
+            lanes = True
+        jax.block_until_ready(stacked)
         part.wall_time_us = (time.perf_counter() - t0) * 1e6
-        for idx, h in zip(part.indices, hists):
-            out_rewards[idx] = np.asarray(h.rewards)
-            out_grad_sq[idx] = np.asarray(h.grad_sq)
-            out_gain[idx] = np.asarray(h.gain_mean)
+        collect(part, stacked, lanes)
+
+    # sharded drain: the deferred block_until_ready — results materialise
+    # here, padded replicate-lanes are masked off, wall time spans
+    # dispatch -> ready per partition
+    for part, t0, stacked, placement in pending:
+        jax.block_until_ready(stacked)
+        part.wall_time_us = (time.perf_counter() - t0) * 1e6
+        collect(part, stacked, placement.n_lanes > 0)
 
     history = History(
         rewards=_stack_histories(out_rewards),
@@ -618,4 +666,4 @@ def sweep(
         gain_mean=_stack_histories(out_gain),
     )
     return SweepResult(scenarios=scenarios, history=history, partitions=parts,
-                       mc_runs=mc_runs)
+                       mc_runs=mc_runs, mode=mode, n_devices=n_devices)

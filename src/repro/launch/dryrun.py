@@ -169,8 +169,17 @@ def build_decode_lowering(cfg, shape, mesh: Mesh):
 from repro.utils import unroll as uscan
 
 
-def _cost_vec(compiled) -> np.ndarray:
+def _cost_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() normalised to one dict: some jax versions
+    return a per-device list (identical SPMD programs — take the first)."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def _cost_vec(compiled) -> np.ndarray:
+    cost = _cost_dict(compiled)
     coll = hlo_lib.parse_collective_bytes(compiled.as_text())
     return np.array(
         [
@@ -329,7 +338,7 @@ def calibrated_costs(cfg, shape, mesh, *, aggregator: str = "ota",
 def analyze(lowered, compiled, cfg, shape, mesh_name: str, n_chips: int,
             extra: Dict[str, Any],
             calibrated: Optional[Dict[str, float]] = None) -> Dict[str, Any]:
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_str = str(mem)

@@ -1,8 +1,22 @@
-"""Production mesh construction (functions only — importing this module never
-touches jax device state)."""
+"""Mesh construction (functions only — importing this module never touches
+jax device state until a constructor is called).
+
+Two families:
+
+* production LLM meshes (``data``/``model`` axes) for the trainer/server;
+* sweep-shaped meshes (``lane``/``mc``/``agents`` axes) for
+  ``repro.core.distribute`` — the device layer under
+  ``sweep(..., mode="sharded")`` and the agent-sharded round functions.
+  Develop on CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,3 +39,50 @@ def n_data_shards(mesh) -> int:
         if axis in mesh.shape:
             n *= mesh.shape[axis]
     return n
+
+
+# ---------------------------------------------------------------------------
+# Sweep-shaped meshes (repro.core.distribute).
+# ---------------------------------------------------------------------------
+
+def make_sweep_mesh(
+    lane_shards: Optional[int] = None,
+    mc_shards: int = 1,
+    devices: Optional[Sequence] = None,
+) -> Mesh:
+    """A ``("lane", "mc")`` mesh for sharded sweep execution.
+
+    Lanes (scenario axis inside one partition) lay across ``lane``; Monte
+    Carlo seeds across ``mc``.  Defaults to every available device on the
+    lane axis — the right shape whenever partitions carry at least as many
+    lanes as devices.  Pass an explicit ``devices`` subset (e.g.
+    ``jax.devices()[:4]``) for scaling studies.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if mc_shards < 1:
+        raise ValueError(f"mc_shards must be >= 1, got {mc_shards}")
+    if lane_shards is not None and lane_shards < 1:
+        raise ValueError(f"lane_shards must be >= 1, got {lane_shards}")
+    if lane_shards is None:
+        lane_shards = max(len(devices) // mc_shards, 1)
+    n = lane_shards * mc_shards
+    if n > len(devices):
+        raise ValueError(
+            f"mesh wants {lane_shards}x{mc_shards}={n} devices but only "
+            f"{len(devices)} are available")
+    grid = np.asarray(devices[:n]).reshape(lane_shards, mc_shards)
+    return Mesh(grid, ("lane", "mc"))
+
+
+def make_agent_mesh(n_shards: Optional[int] = None,
+                    devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D ``("agents",)`` mesh: the production shard_map form of the
+    per-round agent axis (``fedpg.make_round_fn(..., agent_mesh=...)``).
+    ``n_shards`` must divide the round's ``n_agents``."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if n_shards is None:
+        n_shards = len(devices)
+    if n_shards < 1 or n_shards > len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} out of range for {len(devices)} devices")
+    return Mesh(np.asarray(devices[:n_shards]), ("agents",))

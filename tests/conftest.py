@@ -1,6 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device; only launch/dryrun.py forces 512 host devices (in its own
-process).
+process), and CI's mesh job runs tests/test_distribute.py + the golden suite
+in a separate process with ``--xla_force_host_platform_device_count=8``.
 
 Marker policy: ``slow`` and ``bench`` tests are deselected by default via
 ``addopts = -m 'not slow and not bench'`` in pyproject.toml (the tier-1
@@ -8,6 +9,15 @@ gate).  Run the full suite with ``pytest -m ""``.
 """
 import jax
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate tests/golden/*.json from the current code instead "
+             "of comparing against them (then inspect the diff!)",
+    )
+
 
 # ---------------------------------------------------------------------------
 # XLA compilation counting (used by the sweep-engine tests to prove the
@@ -44,9 +54,54 @@ class CompileCounter:
         return False
 
 
+_EAGER_HELPERS_WARMED = False
+
+
+def warm_eager_helpers() -> None:
+    """Compile JAX's eager scaffolding ONCE per process so compile counters
+    compare partition programs, not cold-start helpers.
+
+    A sweep's first run also compiles tiny eager dispatches — key splitting,
+    float32 packing converts, effective-moment math, ``l_bar_for``, the env
+    registry packer, History unstacking slices.  Tests used to hand-warm
+    these (each with its own ad-hoc prologue); the ``compile_counter``
+    fixture now runs this helper instead, with shapes deliberately distinct
+    from any real test so no *partition* program is pre-compiled on the
+    tests' behalf.
+    """
+    global _EAGER_HELPERS_WARMED
+    if _EAGER_HELPERS_WARMED:
+        return
+    from repro.core import fedpg
+    from repro.core.channel import RayleighChannel
+    from repro.core.power_control import TruncatedInversion, make_controlled_channel
+    from repro.core.sweep import grid, sweep
+    from repro.rl.envs import WindyLandmarkNav
+
+    tiny = dict(n_agents=2, batch_m=1, horizon=3, n_rounds=2, debias=True)
+    chan = make_controlled_channel(RayleighChannel(), TruncatedInversion())
+    scens = grid(env=[WindyLandmarkNav(wind=w) for w in (0.0, 0.31, 0.62)],
+                 channel=[chan], noise_sigma=1e-3, **tiny)
+    key = jax.random.key(99)
+    # mc_runs=2 matches the sweep tests' Monte-Carlo width, so the tiny
+    # split/convert programs they dispatch are all compiled here
+    sweep(None, None, scens, key, 2)
+    for s in scens[:1]:
+        from repro.core.sweep import resolve_env_policy
+        fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key, 2,
+                          ota=s.ota_config())
+    fedpg.clear_compilation_cache()
+    _EAGER_HELPERS_WARMED = True
+
+
 @pytest.fixture
 def compile_counter():
-    """Factory fixture: ``with compile_counter() as c: ...; c.count``."""
+    """Factory fixture: ``with compile_counter() as c: ...; c.count``.
+
+    Warms the shared eager helpers first (see :func:`warm_eager_helpers`)
+    so counts taken inside the context are partition/lane programs only.
+    """
+    warm_eager_helpers()
     return CompileCounter
 
 

@@ -114,7 +114,7 @@ def test_two_env_families_compile_once_each(compile_counter):
     scens = grid(env=[env_a, env_b], channel=RayleighChannel(),
                  noise_sigma=1e-3, **SMALL)
     key = jax.random.key(0)
-    jax.random.split(key, 2)  # warm tiny eager helpers out of the counters
+    # eager helpers are pre-warmed by the compile_counter fixture
     fedpg.clear_compilation_cache()
     with compile_counter() as c_naive:
         naive = [
@@ -142,10 +142,8 @@ def test_env_param_axis_bitwise_vs_monte_carlo(compile_counter):
         channel=RayleighChannel(), noise_sigma=1e-3, **SMALL,
     )
     key = jax.random.key(5)
-    # warm the per-shape eager helpers (f32 packing converts, result
-    # unstacking slices) so the counters compare lane programs, not
-    # cold-start scaffolding — same trick as test_sweep.py
-    sweep(None, None, scens, key, 2)
+    # per-shape eager helpers (f32 packing converts, result unstacking
+    # slices) are pre-warmed by the compile_counter fixture
     fedpg.clear_compilation_cache()
     with compile_counter() as c_naive:
         naive = [

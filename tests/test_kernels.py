@@ -145,6 +145,69 @@ def test_ota_property_determinism_and_scale(n, n_agents, seed):
                                rtol=1e-5, atol=1e-5)
 
 
+def _kernel_noise(shape, seed, block_rows=256):
+    """The kernel's own AWGN stream, extracted through the kernel itself:
+    v=0, sigma=1, N=1, m_h=1 makes the fused update return exactly the
+    noise tensor (out = (0 + 1*n) / 1).  Feeding it back through the jnp
+    oracle isolates the scale/add arithmetic for the parity check."""
+    z = jnp.zeros(shape, jnp.float32)
+    return ota_channel_apply(z, sigma=1.0, n_agents=1, m_h=1.0, seed=seed,
+                             block_rows=block_rows)
+
+
+@pytest.mark.parametrize("seed", [0, 123])
+@pytest.mark.parametrize("n_agents,m_h,debias", [
+    (1, 1.0, True),
+    (7, 1.2533, True),     # the paper's Rayleigh m_h
+    (4, 0.8, False),       # debias off: m_h must not be applied
+])
+@pytest.mark.parametrize("sigma", [0.0, 0.5, 2.0])
+def test_ota_kernel_parity_vs_ref(sigma, n_agents, m_h, debias, seed):
+    """ota_channel_apply == ref.ota_channel_ref on the kernel's own noise,
+    across sigma/scale/seed cases (interpret mode on CPU).  Tolerance is one
+    fused-multiply-add of slack: the oracle's XLA lowering may contract
+    v + sigma*n where the kernel keeps separate ops."""
+    shape = (37, 65)  # deliberately unaligned with the (rows, 128) tiling
+    v = jax.random.normal(jax.random.key(seed + 1), shape, jnp.float32)
+    noise = _kernel_noise(shape, seed)
+    out = ota_channel_apply(v, sigma=sigma, n_agents=n_agents, m_h=m_h,
+                            debias=debias, seed=seed)
+    expected = ref.ota_channel_ref(v, noise, sigma=sigma, n_agents=n_agents,
+                                   m_h=m_h, debias=debias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_ota_kernel_parity_bf16():
+    """Parity holds through the bfloat16 cast (compute stays f32)."""
+    shape = (129,)
+    v = jax.random.normal(jax.random.key(9), shape, jnp.float32)
+    noise = _kernel_noise(shape, seed=3)
+    out = ota_channel_apply(v.astype(jnp.bfloat16), sigma=0.5, n_agents=3,
+                            m_h=1.1, seed=3)
+    expected = ref.ota_channel_ref(v.astype(jnp.bfloat16),
+                                   noise.astype(jnp.bfloat16),
+                                   sigma=0.5, n_agents=3, m_h=1.1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ota_kernel_block_shape_invariance():
+    """The noise counter is keyed on the absolute element index, so the
+    same seed must give bitwise-identical output for any block_rows."""
+    v = jax.random.normal(jax.random.key(5), (70000,), jnp.float32)
+    a = ota_channel_apply(v, sigma=0.7, n_agents=5, m_h=1.2, seed=11,
+                          block_rows=64)
+    b = ota_channel_apply(v, sigma=0.7, n_agents=5, m_h=1.2, seed=11,
+                          block_rows=256)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # different seeds must decorrelate, not shift, the stream
+    c = ota_channel_apply(v, sigma=0.7, n_agents=5, m_h=1.2, seed=12,
+                          block_rows=64)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
 def test_ops_dispatch_agreement():
     """ops.py: pallas and ref paths agree on the same inputs."""
     ks = jax.random.split(jax.random.key(2), 3)

@@ -1,0 +1,229 @@
+"""Hypothesis property tests codifying the sweep engine's bitwise-lane
+contract at the *metadata* level (no programs run — these are pure
+partition/packing/identity laws over generated grids):
+
+* ``partition_scenarios`` is a partition: every scenario lands in exactly
+  one ``Partition``, and structure keys are homogeneous inside each;
+* ``_pack_partition`` packs **only** the axes that actually vary inside a
+  partition — constant axes must stay closed-over Python literals (that is
+  what keeps lanes bit-identical to the per-scenario path);
+* ``describe()`` / ``to_csv()`` / ``index()`` round-trip scenario identity.
+
+The assertion bodies are plain helpers so the deterministic smoke test at
+the bottom exercises them even on a bare interpreter (where the hypothesis
+wrappers skip via tests/_hypothesis_stub.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.fedpg import History
+from repro.core.power_control import FullInversion, TruncatedInversion
+from repro.core.sweep import (
+    Scenario, SweepResult, _pack_partition, _structure_key, grid,
+    partition_scenarios,
+)
+from repro.core.channel import (
+    FixedGainChannel, NakagamiChannel, RayleighChannel,
+)
+
+# ---------------------------------------------------------------------------
+# strategies: scenario grids over every axis class the engine distinguishes
+# (structural ints, channel families, continuous params, power control)
+# ---------------------------------------------------------------------------
+
+CHANNELS = [None, RayleighChannel(), RayleighChannel(scale=0.5),
+            NakagamiChannel(m=0.1, omega=1.0), FixedGainChannel(gain=0.7)]
+POLICIES = [None, TruncatedInversion(target=1.0), TruncatedInversion(target=2.0),
+            FullInversion(target=0.8)]
+
+scenario_st = st.builds(
+    Scenario,
+    channel=st.sampled_from(CHANNELS),
+    noise_sigma=st.sampled_from([0.0, 1e-3, 1e-2]),
+    alpha=st.sampled_from([1e-3, 1e-4]),
+    n_agents=st.sampled_from([2, 4]),
+    batch_m=st.sampled_from([2, 3]),
+    n_rounds=st.sampled_from([3, 5]),
+    estimator=st.sampled_from(["gpomdp", "reinforce"]),
+    power_control=st.sampled_from(POLICIES),
+    debias=st.booleans(),
+    tag=st.sampled_from(["", "a", 'quoted,"tag"']),
+)
+grid_st = st.lists(scenario_st, min_size=1, max_size=12)
+
+
+# ---------------------------------------------------------------------------
+# assertion bodies (shared by the hypothesis wrappers and the smoke test)
+# ---------------------------------------------------------------------------
+
+def check_partition_is_partition(scenarios):
+    parts = partition_scenarios(scenarios)
+    seen = [i for p in parts for i in p.indices]
+    # every scenario in exactly one partition, original order preserved inside
+    assert sorted(seen) == list(range(len(scenarios)))
+    assert len(seen) == len(set(seen))
+    for p in parts:
+        assert len(p.indices) == len(p.scenarios)
+        for i, s in zip(p.indices, p.scenarios):
+            assert scenarios[i] is s
+        # structure keys homogeneous inside a partition...
+        assert {_structure_key(s) for s in p.scenarios} == {p.key}
+    # ...and distinct across partitions
+    keys = [p.key for p in parts]
+    assert len(keys) == len(set(keys))
+
+
+def check_pack_only_varying(scenarios):
+    for part in partition_scenarios(scenarios):
+        packed = _pack_partition(part)
+        n = len(part.scenarios)
+        exact = part.proto.channel is None
+
+        def vals(axis):
+            return [getattr(s, axis) for s in part.scenarios]
+
+        # an axis is packed ONLY if it varies (and reaches the program)
+        assert ("alpha" in packed) == (len(set(vals("alpha"))) > 1)
+        if exact:
+            # exact uplink: no OTA axis may be packed at all
+            assert set(packed) <= {"alpha"}
+        else:
+            assert ("noise_sigma" in packed) == (
+                len(set(vals("noise_sigma"))) > 1)
+            assert ("channel" in packed) == (len(set(vals("channel"))) > 1)
+            assert ("power_control" in packed) == (
+                part.proto.power_control is not None
+                and len(set(vals("power_control"))) > 1)
+            # the debias normaliser packs exactly when debiasing is on and
+            # an axis it depends on moves
+            expect_scale = part.proto.debias and (
+                "channel" in packed or "power_control" in packed)
+            assert ("update_scale" in packed) == expect_scale
+        # packed leaves are (n,)-shaped float32 in scenario order
+        for name, leaf in packed.items():
+            leaves = leaf.values() if isinstance(leaf, dict) else [leaf]
+            for arr in leaves:
+                assert arr.shape[0] == n
+                assert arr.dtype == np.float32
+
+
+def _dummy_result(scenarios, mc_runs=2, n_rounds=3):
+    n = len(scenarios)
+    mk = lambda: np.zeros((n, mc_runs, n_rounds), np.float32)  # noqa: E731
+    return SweepResult(
+        scenarios=list(scenarios),
+        history=History(rewards=mk(), grad_sq=mk(), gain_mean=mk()),
+        partitions=partition_scenarios(scenarios), mc_runs=mc_runs)
+
+
+def check_describe_csv_index_round_trip(scenarios):
+    res = _dummy_result(scenarios)
+    rows = res.to_dicts(tail=2)
+    describes = [s.describe() for s in scenarios]
+    # describe() is injective on distinct scenarios: no two different grid
+    # points may collapse to the same table row
+    for i, si in enumerate(scenarios):
+        for j, sj in enumerate(scenarios):
+            if si != sj:
+                assert describes[i] != describes[j], (si, sj)
+    # to_dicts carries every describe field, in scenario order
+    for i, (row, desc) in enumerate(zip(rows, describes)):
+        assert row["index"] == i
+        assert {k: row[k] for k in desc} == desc
+    # CSV round-trips the row count, header and index order (cells with
+    # commas/quotes are RFC-4180-escaped, so splitting lines is safe)
+    text = res.to_csv(tail=2)
+    lines = text.strip().splitlines()
+    assert len(lines) == len(scenarios) + 1
+    assert lines[0].startswith("index,tag,channel")
+    # index() finds each scenario back from its own field values
+    for i, s in enumerate(scenarios):
+        fields = {f.name: getattr(s, f.name)
+                  for f in dataclasses.fields(Scenario)}
+        j = res.index(**fields)
+        assert scenarios[j] == s
+        assert j <= i  # first match wins; an equal earlier scenario is fine
+
+
+# ---------------------------------------------------------------------------
+# hypothesis wrappers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(scenarios=grid_st)
+def test_property_partition_is_partition(scenarios):
+    check_partition_is_partition(scenarios)
+
+
+@settings(max_examples=60, deadline=None)
+@given(scenarios=grid_st)
+def test_property_pack_only_varying(scenarios):
+    check_pack_only_varying(scenarios)
+
+
+@settings(max_examples=30, deadline=None)
+@given(scenarios=grid_st)
+def test_property_describe_csv_index_round_trip(scenarios):
+    check_describe_csv_index_round_trip(scenarios)
+
+
+# ---------------------------------------------------------------------------
+# deterministic smoke: the same laws on a hand-built grid covering every
+# branch (exact + two channel families + power control + debias + tags),
+# so the helpers run even without hypothesis installed
+# ---------------------------------------------------------------------------
+
+def test_contract_smoke_on_dense_grid():
+    scens = (
+        grid(channel=[None, RayleighChannel(), RayleighChannel(scale=0.5),
+                      NakagamiChannel(m=0.1, omega=1.0)],
+             noise_sigma=[0.0, 1e-3], alpha=[1e-3, 1e-4], debias=True,
+             n_agents=2, batch_m=2, n_rounds=3)
+        + grid(channel=RayleighChannel(),
+               power_control=[TruncatedInversion(target=1.0),
+                              TruncatedInversion(target=2.0)],
+               debias=[True, False], n_agents=2, batch_m=2, n_rounds=3)
+        + [Scenario(channel=None, tag='say "hi", ok')]
+    )
+    check_partition_is_partition(scens)
+    check_pack_only_varying(scens)
+    check_describe_csv_index_round_trip(scens)
+    # duplicated scenarios still land in one partition and index() returns
+    # the first copy
+    dup = [scens[0], scens[0], scens[1]]
+    check_partition_is_partition(dup)
+    res = _dummy_result(dup)
+    assert res.index(channel=None, noise_sigma=0.0, alpha=1e-3) == 0
+
+
+def test_property_files_note():
+    """Hypothesis is an optional dev dependency: on a bare interpreter the
+    @given tests above skip (tests/_hypothesis_stub.py) and the smoke test
+    carries the contract; CI installs the real library."""
+    assert callable(given)
+
+
+if __name__ == "__main__":  # manual fuzz without pytest
+    import random
+
+    for _ in range(200):
+        scens = [random.choice([
+            Scenario(channel=random.choice(CHANNELS),
+                     noise_sigma=random.choice([0.0, 1e-3, 1e-2]),
+                     alpha=random.choice([1e-3, 1e-4]),
+                     n_agents=random.choice([2, 4]),
+                     estimator=random.choice(["gpomdp", "reinforce"]),
+                     power_control=random.choice(POLICIES),
+                     debias=random.choice([True, False]))])
+            for _ in range(random.randint(1, 12))]
+        check_partition_is_partition(scens)
+        check_pack_only_varying(scens)
+        check_describe_csv_index_round_trip(scens)
+    print("manual fuzz: 200 grids OK")
