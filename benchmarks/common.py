@@ -1,11 +1,21 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Importing this module applies the process platform config (see
+``repro.utils.platform``): ``REPRO_EMULATED_DEVICES=8`` runs the same
+benches on an emulated 8-device CPU mesh that a real accelerator job runs
+on hardware — no per-job ``XLA_FLAGS`` surgery.
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable, List
 
-import jax
-import jax.numpy as jnp
+from repro.utils import platform as rplat  # pre-jax: may set device flags
+
+rplat.apply_emulated_devices()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 # structured (name, us_per_call, derived) records; formatted only at print
 # time so consumers (e.g. the --json export) never re-parse CSV strings

@@ -88,7 +88,8 @@ def aggregation_error_floor(n_agents: int = 10, n_draws: int = 400):
     import jax.numpy as jnp
 
     from repro.core import gpomdp
-    from repro.core.ota import OTAConfig, aggregate_stacked, exact_aggregate
+    from repro.core import ota
+    from repro.core.ota import OTAConfig
     from repro.rl.sampler import rollout_batch
     from repro.utils.tree import tree_global_norm_sq, tree_sub
 
@@ -119,7 +120,7 @@ def aggregation_error_floor(n_agents: int = 10, n_draws: int = 400):
                     return gpomdp.gpomdp_gradient(pol, theta, traj, 0.99)
 
                 grads = jax.vmap(agent)(jax.random.split(k1, n_agents))
-                u, _ = aggregate_stacked(cfg_ota, k2, grads)
+                u, _ = ota.aggregate(grads, cfg_ota, key=k2, backend="xla")
                 return tree_global_norm_sq(tree_sub(u, g_ref))
 
             e = jax.vmap(one)(jax.random.split(jax.random.key(3), n_draws))

@@ -24,14 +24,15 @@ def run():
     cfg = ota.OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
                         debias=True)
 
-    agg = jax.jit(lambda k: ota.aggregate_stacked(cfg, k, grads)[0])
+    agg = jax.jit(
+        lambda k: ota.aggregate(grads, cfg, key=k, backend="xla")[0])
     us = time_call(agg, jax.random.key(0))
     n_bytes = sum(x.size * 4 for x in grads.values())
     emit("ota_aggregate_stacked_1M", us,
          f"agents={n_agents};bytes={n_bytes};"
          f"tpu_mem_bound_est_us={n_bytes / HBM_BW * 1e6:.1f}")
 
-    exact = jax.jit(lambda: ota.exact_aggregate(grads))
+    exact = jax.jit(lambda: ota.aggregate(grads, None)[0])
     emit("exact_aggregate_1M", time_call(exact),
          "baseline=algorithm1_mean")
 

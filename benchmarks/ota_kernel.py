@@ -1,0 +1,85 @@
+"""Fused OTA kernel vs XLA fusion: the tentpole's honest benchmark.
+
+For each parameter size, times the full uplink — gain matvec over the
+(N, P) gradient stack, AWGN, debias scale, SGD parameter update — three
+ways:
+
+* ``xla``           — the dispatcher's XLA op chain (what golden traces pin),
+* ``pallas``        — the fused kernel (compiled on TPU; interpret mode on
+  CPU, where the timing is a correctness harness, not a speed claim),
+* ``pallas_bf16``   — the fused kernel with the bf16 wire format.
+
+Each row carries the analytic roofline expectation from
+``utils.roofline.ota_fused_cost`` so the measured CPU numbers ship next to
+the modelled TPU numbers the dry-run reports.  Emits rows consumed by
+``benchmarks/run.py --json`` → ``BENCH_ota_kernel.json`` in CI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ota
+from repro.core.channel import RayleighChannel
+from repro.utils.roofline import ota_fused_cost
+
+from benchmarks.common import emit, time_call
+
+# (name, n_params) — ≥3 sizes so the crossover (if any) is visible
+SIZES = (
+    ("64k", 1 << 16),
+    ("512k", 1 << 19),
+    ("2M", 1 << 21),
+)
+QUICK_SIZES = SIZES[:3]  # quick mode trims iterations, not coverage
+
+
+def _setup(n_params: int, n_agents: int):
+    g = {"w": jax.random.normal(jax.random.key(0), (n_agents, n_params),
+                                jnp.float32) * 1e-2}
+    p = {"w": jnp.zeros((n_params,), jnp.float32)}
+    return g, p
+
+
+def run(quick: bool = False, n_agents: int = 8):
+    on_tpu = jax.default_backend() == "tpu"
+    iters = 2 if quick else 5
+    cfg = ota.OTAConfig(channel=RayleighChannel(), noise_sigma=1e-2,
+                        debias=True)
+    cfg_bf16 = ota.OTAConfig(channel=RayleighChannel(), noise_sigma=1e-2,
+                             debias=True, wire_dtype="bfloat16")
+    key = jax.random.key(7)
+
+    for name, n_params in (QUICK_SIZES if quick else SIZES):
+        grads, params = _setup(n_params, n_agents)
+        est = ota_fused_cost(n_params, n_agents, mode="sgd")
+        est_bf16 = ota_fused_cost(n_params, n_agents, wire_bytes=2,
+                                  mode="sgd")
+
+        def bench(backend, c, tag, est_row):
+            fn = jax.jit(lambda k: ota.aggregate_apply(
+                grads, c, params, key=k, alpha=1e-3, backend=backend)[0])
+            us = time_call(fn, key, iters=iters)
+            n_bytes = n_agents * n_params * 4
+            emit(
+                f"ota_uplink_{tag}_{name}",
+                us,
+                f"agents={n_agents};params={n_params};bytes={n_bytes};"
+                f"backend={backend};compiled={on_tpu or backend == 'xla'};"
+                f"tpu_roofline_us={est_row['fused_s'] * 1e6:.2f};"
+                f"tpu_xla_roofline_us={est_row['xla_s'] * 1e6:.2f};"
+                f"tpu_speedup_est={est_row['speedup_est']:.2f}",
+            )
+            return us
+
+        us_xla = bench("xla", cfg, "xla", est)
+        # interpret mode on CPU: correctness-harness timing only
+        us_pl = bench("pallas", cfg, "pallas", est)
+        bench("pallas", cfg_bf16, "pallas_bf16", est_bf16)
+        emit(
+            f"ota_uplink_ratio_{name}",
+            0.0,
+            f"measured_xla_over_pallas={us_xla / us_pl:.3f};"
+            f"modelled_tpu_speedup={est['speedup_est']:.2f};"
+            f"note={'compiled' if on_tpu else 'pallas_is_interpret_mode'}",
+        )

@@ -37,5 +37,14 @@ def run(dryrun_dir: str = "experiments/dryrun"):
             f"collective_ms={r['collective_s']*1e3:.2f};"
             f"useful_ratio={r['useful_flop_ratio']:.3f};mfu={r['mfu']:.4f}",
         )
+        ota = rec.get("ota_fused_roofline")
+        if ota:
+            emit(
+                f"ota_fused_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+                ota["fused_s"] * 1e6,
+                f"xla_us={ota['xla_s']*1e6:.1f};"
+                f"speedup_est={ota['speedup_est']:.2f};"
+                f"agents={ota['n_agents']};mode={ota['mode']}",
+            )
         n += 1
     emit("roofline_table_rows", 0.0, f"count={n}")

@@ -16,8 +16,8 @@ import time
 
 from benchmarks import (  # noqa: E402
     et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
-    fig_env_zoo, fig_power_control, fig_scaling, microbench, roofline_table,
-    theory_table,
+    fig_env_zoo, fig_power_control, fig_scaling, microbench, ota_kernel,
+    roofline_table, theory_table,
 )
 from benchmarks.common import ROWS, emit
 
@@ -41,6 +41,8 @@ SUITES = {
         n_rounds=30 if quick else 60, lanes=8 if quick else 16),
     "micro": lambda quick: microbench.run(),
     "roofline": lambda quick: roofline_table.run(),
+    # fused OTA kernel vs the XLA chain (BENCH_ota_kernel.json in CI)
+    "ota_kernel": lambda quick: ota_kernel.run(quick=quick),
 }
 
 

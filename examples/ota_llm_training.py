@@ -27,6 +27,14 @@ def main():
     ap.add_argument("--n-agents", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "xla", "pallas"),
+                    help="uplink implementation: the fused Pallas kernel, "
+                         "the XLA op chain, or auto (pallas on TPU)")
+    ap.add_argument("--wire-dtype", default="",
+                    choices=("", "bfloat16"),
+                    help="uplink payload dtype on the pallas backend "
+                         "(fp32 master copy either way)")
     args = ap.parse_args()
 
     # ~100M params: llama3.2-3b family, reduced width/depth
@@ -44,6 +52,7 @@ def main():
         aggregator="ota", channel="rayleigh", noise_db=-60.0,
         n_agents=args.n_agents, microbatch=2, lr=1e-3,
         warmup=20, total_steps=args.steps,
+        ota_backend=args.backend, wire_dtype=args.wire_dtype,
     )
     state = trainer.init_state(model, tcfg, jax.random.key(0))
     step = jax.jit(trainer.make_train_step(model, tcfg))

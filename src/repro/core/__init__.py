@@ -3,9 +3,14 @@
 Public API:
     channel   — fading-channel models (Rayleigh, Nakagami-m, ...) with exact
                 (m_h, sigma_h^2) statistics used by the theory.
-    ota       — the over-the-air aggregation primitive (Eq. 6-7), in three
-                mathematically equivalent forms (stacked / shard_map-psum /
-                channel-weighted-loss) plus the exact Algorithm-1 baseline.
+    ota       — the over-the-air aggregation primitive (Eq. 6-7) behind one
+                dispatcher: ``aggregate(grads, cfg, key=..., axis=...,
+                backend=...)`` covers the stacked, shard_map-psum and exact
+                (Algorithm-1, ``cfg=None``) forms, and ``aggregate_apply``
+                fuses the server SGD step.  ``backend="pallas"`` routes the
+                stacked form through the fused uplink kernel in
+                ``repro.kernels.ota_fused`` (auto-selected on TPU); the
+                legacy entry points survive as DeprecationWarning shims.
     gpomdp    — REINFORCE and mini-batch G(PO)MDP gradient estimators (Eq. 4).
     theory    — smoothness constant L, bound constant V, Theorem 1/2 right-
                 hand sides and Corollary 1 complexity calculators.
@@ -49,8 +54,8 @@ Public API:
                 + test_distribute harness).  agent_mesh_for builds the
                 ("agents",) mesh for fedpg.run(..., agent_mesh=...), which
                 runs each round's fleet in the production shard_map form
-                (ota.psum_aggregate_stacked) — HeterogeneousEnv stacks and
-                per-agent power control shard with it.
+                (ota.aggregate with axis names) — HeterogeneousEnv stacks
+                and per-agent power control shard with it.
 
 The environment zoo itself (LandmarkNav variants, CliffWalk, LQR, Garnet
 tabular MDPs, HeterogeneousEnv, register_env) lives in ``repro.rl.envs``.

@@ -28,13 +28,14 @@ lanes are bit-identical to the default mode (and hence to per-scenario
 ``fedpg.monte_carlo``) wherever that mode is bitwise; the padded lanes
 recompute the last real lane and never reach the result.
 ``tests/test_distribute.py`` plus the golden-trace suite enforce this on an
-8-device emulated CPU mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+8-device emulated CPU mesh (``REPRO_EMULATED_DEVICES=8``, applied by
+``repro.utils.platform`` before JAX initialises).
 
 The *agent* axis inside a round is the other shardable dimension: build a
 mesh with :func:`agent_mesh_for` and pass it to
 ``fedpg.run(..., agent_mesh=...)`` to run the per-round fleet in its
-production ``shard_map``/``psum_aggregate`` form (see
-``ota.psum_aggregate_stacked``).
+production ``shard_map`` form — ``ota.aggregate(..., axis=...,
+local_stack=True)``.
 """
 from __future__ import annotations
 

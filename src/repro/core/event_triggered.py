@@ -23,6 +23,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import ota
 from repro.core.fedpg import (
     FedPGConfig, _estimator_grad, _hashable, register_compiled_cache,
 )
@@ -88,7 +89,7 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array):
             ),
             grads, stale,
         )
-        update = jax.tree.map(lambda g: jnp.mean(g, axis=0), used)
+        update = ota.aggregate(used, None)[0]  # exact uplink (ideal mean)
         theta = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
 
         reward = empirical_reward(trajs, cfg.gamma)

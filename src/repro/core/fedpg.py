@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gpomdp
-from repro.core.ota import OTAConfig, aggregate_stacked, exact_aggregate
+from repro.core import ota
+from repro.core.ota import OTAConfig
 from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import empirical_reward, rollout_batch
 from repro.utils.tree import tree_global_norm_sq
@@ -64,6 +65,7 @@ def make_round_fn(
     *,
     agent_mesh=None,
     agent_axis: str = "agents",
+    ota_backend: str = "auto",
 ):
     """One communication round: (theta, key) -> (theta', metrics).
 
@@ -74,8 +76,8 @@ def make_round_fn(
     ``agent_mesh`` shards the agent axis across a device mesh instead: each
     shard rolls out its slice of the fleet (``n_agents / axis_size`` agents,
     per-agent env stacks sliced by ``shard_map``) and the uplink runs through
-    :func:`repro.core.ota.psum_aggregate_stacked` — the production
-    shard_map/psum form, with per-agent power control keyed on global agent
+    :func:`repro.core.ota.aggregate` in its axis-stacked form — the
+    production shard_map/psum form, with per-agent power control keyed on global agent
     indices.  Numerical relationship to the vmapped form: rollouts are
     identical (same per-agent keys); cross-agent reductions psum in mesh
     order, so exact-uplink runs and *deterministic* channels (FixedGain,
@@ -83,11 +85,16 @@ def make_round_fn(
     a *stochastic* channel come from the indexed fold_in stream rather than
     the stacked batched draw, a different random realisation entirely:
     those histories agree in distribution, not numerically.
+
+    ``ota_backend`` selects the aggregation implementation ("xla",
+    "pallas", or "auto" — see :class:`repro.core.ota.AggregateSpec`); on
+    the pallas backend the uplink *and* the server SGD step run as one
+    fused kernel pass (:func:`repro.core.ota.aggregate_apply`).
     """
 
     if agent_mesh is not None:
         return _make_agent_sharded_round_fn(
-            env, policy, cfg, ota_cfg, agent_mesh, agent_axis)
+            env, policy, cfg, ota_cfg, agent_mesh, agent_axis, ota_backend)
 
     grad_fn = _estimator_grad(cfg)
     hetero = isinstance(env, HeterogeneousEnv)
@@ -108,17 +115,20 @@ def make_round_fn(
         grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)  # N axis
 
         # --- uplink + server update --------------------------------------
+        mean_grad = ota.aggregate(grads, None)[0]  # also the grad_sq metric
         if ota_cfg is None:
-            update = exact_aggregate(grads)
             gain_mean = jnp.ones(())
+            theta_next = jax.tree.map(
+                lambda p, u: p - cfg.alpha * u, theta, mean_grad)
         else:
-            update, h = aggregate_stacked(ota_cfg, key_chan, grads)
+            theta_next, h = ota.aggregate_apply(
+                grads, ota_cfg, theta, key=key_chan, alpha=cfg.alpha,
+                backend=ota_backend)
             gain_mean = jnp.mean(h)
-        theta_next = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
 
         # --- metrics ------------------------------------------------------
         reward = empirical_reward(trajs, cfg.gamma)
-        grad_sq = tree_global_norm_sq(exact_aggregate(grads))
+        grad_sq = tree_global_norm_sq(mean_grad)
         return theta_next, (reward, grad_sq, gain_mean)
 
     return round_fn
@@ -126,21 +136,20 @@ def make_round_fn(
 
 def _make_agent_sharded_round_fn(
     env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
-    mesh, axis_name: str,
+    mesh, axis_name: str, ota_backend: str = "auto",
 ):
     """The agent axis laid across ``mesh[axis_name]`` via shard_map.
 
     Each shard vmaps over its ``n_local = n_agents / axis_size`` agents;
     per-agent env stacks and sampling keys enter with ``P(axis_name)`` specs
     so shard_map hands every shard exactly its fleet slice.  The uplink is
-    the psum form (``psum_aggregate_stacked``); metrics psum local partial
-    sums, so every shard ends the round with identical (replicated) theta
-    and metrics.
+    the psum form (``ota.aggregate`` with ``local_stack=True``); metrics
+    psum local partial sums, so every shard ends the round with identical
+    (replicated) theta and metrics.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.ota import psum_aggregate_stacked
     from repro.rl.sampler import discounted_return
 
     grad_fn = _estimator_grad(cfg)
@@ -165,17 +174,18 @@ def _make_agent_sharded_round_fn(
             return grad_fn(policy, theta, traj, cfg.gamma), traj
 
         grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)
-        local_sum = jax.tree.map(lambda g: jnp.sum(g, axis=0), grads)
-        mean_grad = jax.tree.map(
-            lambda s: jax.lax.psum(s, axis_name) / cfg.n_agents, local_sum)
+        mean_grad = ota.aggregate(
+            grads, None, axis=(axis_name,), n_agents=cfg.n_agents,
+            local_stack=True)[0]
 
         if ota_cfg is None:
             update = mean_grad
             gain_mean = jnp.ones(())
         else:
-            update, h = psum_aggregate_stacked(
-                ota_cfg, key_chan, grads, (axis_name,),
-                n_agents=cfg.n_agents)
+            update, h = ota.aggregate(
+                grads, ota_cfg, key=key_chan, axis=(axis_name,),
+                n_agents=cfg.n_agents, local_stack=True,
+                backend=ota_backend)
             gain_mean = jax.lax.psum(jnp.sum(h), axis_name) / cfg.n_agents
         theta_next = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
 
@@ -210,18 +220,21 @@ def run(
     theta0: Optional[PyTree] = None,
     agent_mesh=None,
     agent_axis: str = "agents",
+    ota_backend: str = "auto",
 ):
     """Run K rounds; returns (theta_K, History).
 
     ``ota=None`` is Algorithm 1 (exact aggregation); an ``OTAConfig`` is
     Algorithm 2 over the configured channel.  ``agent_mesh`` shards the
     agent axis across a device mesh (see :func:`make_round_fn`) — use
-    ``repro.core.distribute.agent_mesh_for`` to build one.
+    ``repro.core.distribute.agent_mesh_for`` to build one.  ``ota_backend``
+    routes the uplink ("xla" | "pallas" | "auto").
     """
     key_init, key_scan = jax.random.split(key)
     theta = policy.init(key_init) if theta0 is None else theta0
     round_fn = make_round_fn(env, policy, cfg, ota,
-                             agent_mesh=agent_mesh, agent_axis=agent_axis)
+                             agent_mesh=agent_mesh, agent_axis=agent_axis,
+                             ota_backend=ota_backend)
 
     def body(carry, key_k):
         theta = carry
@@ -248,13 +261,17 @@ _CACHE_SIZE = 64
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
-def _compiled_run(env, policy, cfg: FedPGConfig, ota):
-    return jax.jit(lambda k: run(env, policy, cfg, k, ota=ota))
+def _compiled_run(env, policy, cfg: FedPGConfig, ota_cfg, backend: str):
+    return jax.jit(
+        lambda k: run(env, policy, cfg, k, ota=ota_cfg, ota_backend=backend))
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
-def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota, n_runs: int):
-    return jax.jit(jax.vmap(lambda k: run(env, policy, cfg, k, ota=ota)[1]))
+def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota_cfg,
+                          n_runs: int, backend: str):
+    return jax.jit(jax.vmap(
+        lambda k: run(env, policy, cfg, k, ota=ota_cfg,
+                      ota_backend=backend)[1]))
 
 
 # every compiled-program cache in the package; other modules (e.g.
@@ -281,17 +298,20 @@ def _hashable(*objs) -> bool:
         return False
 
 
-def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None):
+def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None,
+            ota_backend: str = "auto"):
     """jit-compiled entry point (env/policy/cfgs are closure constants).
 
-    Repeated calls with the same ``(env, policy, cfg, ota)`` reuse the
-    compiled program (``theta0`` is a pytree and cannot key a cache, so
-    passing one compiles fresh).  Caching needs every argument hashable:
-    envs holding jax arrays (e.g. ``TabularMDP``) take the uncached path.
+    Repeated calls with the same ``(env, policy, cfg, ota, ota_backend)``
+    reuse the compiled program (``theta0`` is a pytree and cannot key a
+    cache, so passing one compiles fresh).  Caching needs every argument
+    hashable: envs holding jax arrays (e.g. ``TabularMDP``) take the
+    uncached path.
     """
     if theta0 is None and _hashable(env, policy, cfg, ota):
-        return _compiled_run(env, policy, cfg, ota)(key)
-    fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0))
+        return _compiled_run(env, policy, cfg, ota, ota_backend)(key)
+    fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0,
+                               ota_backend=ota_backend))
     return fn(key)
 
 
@@ -301,7 +321,8 @@ def avg_grad_sq(history: History) -> jax.Array:
 
 
 def monte_carlo(
-    env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None
+    env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None,
+    ota_backend: str = "auto",
 ):
     """n_runs independent repetitions (the paper uses 20): vmapped.
 
@@ -312,6 +333,9 @@ def monte_carlo(
     """
     keys = jax.random.split(key, n_runs)
     if _hashable(env, policy, cfg, ota):
-        return _compiled_monte_carlo(env, policy, cfg, ota, n_runs)(keys)
-    fn = jax.jit(jax.vmap(lambda k: run(env, policy, cfg, k, ota=ota)[1]))
+        return _compiled_monte_carlo(env, policy, cfg, ota, n_runs,
+                                     ota_backend)(keys)
+    fn = jax.jit(jax.vmap(
+        lambda k: run(env, policy, cfg, k, ota=ota,
+                      ota_backend=ota_backend)[1]))
     return fn(keys)

@@ -3,22 +3,45 @@
 The physical channel computes ``v_k = sum_i h_{i,k} * g_i + n_k`` "for free"
 by analog superposition; the server applies ``theta <- theta - alpha * v_k/N``.
 On a TPU mesh the sum is a ``psum`` and the distortion/noise are explicit
-tensor ops.  Three mathematically equivalent implementations are provided
-(and tested equal against each other):
+tensor ops.
 
-1. ``aggregate_stacked``  — literal Algorithm 2 over per-agent gradient
-   pytrees stacked on a leading N axis.  Used by the RL loops where agents
-   are vmapped workers.
-2. ``psum_aggregate``     — ``shard_map`` form: each data-shard scales its
-   local gradient by its own gain and ``psum``s across the agent axes; the
-   AWGN is generated identically on every shard from a shared key (so no
-   extra broadcast is needed).  Production form for the LLM trainer.
-3. channel-weighted loss  — ``sample_gains`` + ``example_weights`` fold the
-   gain into the per-example loss weight *before* autodiff, so a vanilla
-   pjit gradient already equals ``sum_i h_i grad_i / N``; ``add_awgn`` then
-   applies the server noise once.  Zero extra collectives vs. plain DP.
+**Entry point:** :func:`aggregate` — one dispatcher over every mathematically
+equivalent implementation form, described by an :class:`AggregateSpec`:
 
-``exact_aggregate`` is the Algorithm-1 baseline (ideal per-agent uplink).
+* form ``"stacked"``      — literal Algorithm 2 over per-agent gradient
+  pytrees stacked on a leading N axis (the RL loops' vmapped workers).
+* form ``"axis"``         — ``shard_map`` form: each data-shard scales its
+  local gradient by its own gain and ``psum``s across the agent axes; the
+  AWGN is generated identically on every shard from a shared key.
+* form ``"axis_stacked"`` — the axis form for shards that each carry a
+  *stack* of agents (the agent-mesh production path).
+* ``exact=True``          — the Algorithm-1 baseline (ideal uplink) in any
+  form: the plain mean.
+
+Backends: ``"xla"`` executes the historical op chain (bit-identical to the
+pre-dispatcher entry points); ``"pallas"`` routes the stacked form through
+the fused kernel ``repro.kernels.ota_fused`` (gain matvec + counter-PRNG
+AWGN + debias in ONE pass over the flattened parameter vector, bf16 wire
+format via ``OTAConfig.wire_dtype``); ``"auto"`` picks pallas on TPU and
+xla elsewhere.  The pallas backend draws its AWGN from the kernel's
+counter PRNG — same distribution, different stream than the xla
+threefry draw, so histories agree in distribution, not bitwise.
+
+:func:`aggregate_apply` additionally fuses the server SGD update
+``theta' = theta - alpha * u`` into the same kernel pass (the fedpg round
+loop's uplink tail).
+
+The legacy entry points (``aggregate_stacked``, ``exact_aggregate``,
+``psum_aggregate``, ``psum_aggregate_stacked``) remain as thin deprecated
+wrappers; new in-repo code must call :func:`aggregate` (enforced by
+``tools/lint_aggregation_api.py`` in CI).
+
+A third equivalent form needs no aggregation call at all: channel-weighted
+loss — ``sample_gains`` + ``example_weights`` fold the gain into the
+per-example loss weight *before* autodiff, so a vanilla pjit gradient
+already equals ``sum_i h_i grad_i / N``; ``add_awgn`` then applies the
+server noise once.  Zero extra collectives vs. plain DP.
+
 All forms return the *update direction* ``u_k = v_k / N`` so that
 ``theta^{k+1} = theta^k - alpha * u_k`` matches Eq. (7) exactly.  Setting
 ``debias=True`` additionally divides by ``m_h`` which makes the estimator
@@ -28,6 +51,7 @@ paper's faithful update uses ``debias=False``.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, replace
 from typing import Any, Optional, Sequence, Tuple, Union
 
@@ -56,8 +80,7 @@ def _axis_size(name: str) -> Scalar:
     newer jax; the pinned 0.4.x falls back to a psum of ones — a *traced*
     count, so callers that need a static agent count (per-agent power-control
     moments, float64-folded scales) must pass one explicitly (see the
-    ``n_agents`` kwarg on :func:`psum_aggregate` /
-    :func:`psum_aggregate_stacked`)."""
+    ``n_agents`` kwarg on :func:`aggregate`)."""
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(name)
     return jax.lax.psum(jnp.ones((), jnp.int32), name)
@@ -75,7 +98,10 @@ class OTAConfig:
     control; ``update_scale`` overrides the full server normalisation
     ``1 / (N * norm_const)`` — the sweep engine precomputes it in float64
     per scenario so that batched lanes multiply by exactly the constant the
-    unbatched program would have folded in.
+    unbatched program would have folded in.  ``wire_dtype`` narrows the
+    uplink payload on the pallas backend (``"bfloat16"`` casts the stacked
+    gradients before the fused gain matvec; compute and the parameter
+    master copy stay float32); the default ``""`` keeps the native dtype.
     """
 
     channel: Channel
@@ -83,6 +109,7 @@ class OTAConfig:
     debias: bool = False       # divide by m_h (unbiased grad estimate)
     power_control: Optional[PowerPolicy] = None
     update_scale: Optional[Scalar] = None
+    wire_dtype: str = ""       # "" (native) | "bfloat16" — pallas wire format
 
     def __post_init__(self):
         # Fail at config-build time, not rounds later: a debiased update
@@ -138,7 +165,146 @@ class OTAConfig:
 
 
 # ---------------------------------------------------------------------------
-# Form 1: stacked per-agent gradients (literal Algorithm 2).
+# The unified dispatcher.
+# ---------------------------------------------------------------------------
+
+_BACKENDS = ("auto", "xla", "pallas")
+_FORMS = ("stacked", "axis", "axis_stacked")
+
+
+@dataclass(frozen=True)
+class AggregateSpec:
+    """Fully resolved description of one aggregation call.
+
+    ``form``    — ``"stacked"`` (leading-N pytree), ``"axis"`` (one agent
+                  per shard inside shard_map), ``"axis_stacked"`` (a local
+                  agent stack per shard inside shard_map).
+    ``exact``   — ideal Algorithm-1 uplink (plain mean; no channel/noise).
+    ``backend`` — ``"xla"`` | ``"pallas"`` | ``"auto"``.  The pallas fused
+                  kernel implements the stacked form; axis forms always
+                  lower to the xla psum chain (``"auto"`` resolves there,
+                  an explicit ``"pallas"`` raises).
+    """
+
+    form: str = "stacked"
+    exact: bool = False
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.form not in _FORMS:
+            raise ValueError(f"unknown form {self.form!r}; one of {_FORMS}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; one of {_BACKENDS}")
+
+    def resolved_backend(self) -> str:
+        """The concrete backend this spec executes on, on this process."""
+        if self.exact:
+            return "xla"
+        if self.backend == "auto":
+            if self.form == "stacked" and jax.default_backend() == "tpu":
+                return "pallas"
+            return "xla"
+        if self.backend == "pallas" and self.form != "stacked":
+            raise ValueError(
+                "backend='pallas' implements the stacked form only; axis "
+                "forms run the psum chain (use backend='auto' or 'xla')")
+        return self.backend
+
+
+def _make_spec(cfg: Optional[OTAConfig], axis, local_stack: bool,
+               backend: str) -> AggregateSpec:
+    form = "stacked" if axis is None else (
+        "axis_stacked" if local_stack else "axis")
+    return AggregateSpec(form=form, exact=cfg is None, backend=backend)
+
+
+def aggregate(
+    grads: PyTree,
+    cfg: Optional[OTAConfig],
+    *,
+    key: Optional[jax.Array] = None,
+    axis: Optional[Sequence[str]] = None,
+    n_agents: Optional[int] = None,
+    backend: str = "auto",
+    local_stack: bool = False,
+    gains: Optional[jax.Array] = None,
+    spec: Optional[AggregateSpec] = None,
+) -> Tuple[PyTree, jax.Array]:
+    """OTA-aggregate ``grads`` under ``cfg``; returns ``(u_k, h)``.
+
+    ``cfg=None`` is the exact Algorithm-1 uplink (ideal mean; ``h == 1``).
+    ``axis=None`` selects the stacked form (leaves carry a leading N axis);
+    an axis-name tuple selects the shard_map/psum forms, ``local_stack=True``
+    when each shard carries a stack of agents.  ``key`` is required for
+    noisy forms; ``n_agents`` is the static global agent count when the
+    caller knows it (needed by per-agent power policies and traced-count
+    jax versions).  ``backend``/``spec`` pick the implementation —
+    see :class:`AggregateSpec`.  ``gains`` overrides the channel draw
+    (stacked form only, for equivalence tests).
+
+    ``h`` is the sampled gain realisation: shape ``(N,)`` for the stacked
+    form, the local shard's gains for the axis forms, ``1.0`` when exact.
+    """
+    sp = spec if spec is not None else _make_spec(cfg, axis, local_stack,
+                                                  backend)
+    if sp.form != "stacked" and axis is None:
+        raise ValueError(f"form {sp.form!r} needs an axis-name tuple")
+
+    if sp.exact:
+        if sp.form == "stacked":
+            return _exact_mean(grads), jnp.ones(())
+        if sp.form == "axis":
+            return jax.lax.pmean(grads, tuple(axis)), jnp.ones(())
+        return _exact_mean_axis_stacked(grads, tuple(axis), n_agents), \
+            jnp.ones(())
+
+    if cfg is None:
+        raise ValueError("noisy spec needs an OTAConfig")
+    if key is None:
+        raise ValueError("noisy aggregation needs a PRNG key")
+
+    be = sp.resolved_backend()
+    if sp.form == "stacked":
+        if be == "pallas":
+            return _aggregate_stacked_pallas(cfg, key, grads, gains=gains)
+        return _aggregate_stacked_xla(cfg, key, grads, gains=gains)
+    if sp.form == "axis":
+        u, h = _psum_axis(cfg, key, grads, tuple(axis), n_agents=n_agents)
+        return u, h
+    return _psum_axis_stacked(cfg, key, grads, tuple(axis),
+                              n_agents=n_agents)
+
+
+def aggregate_apply(
+    grads: PyTree,
+    cfg: Optional[OTAConfig],
+    params: PyTree,
+    *,
+    key: Optional[jax.Array] = None,
+    alpha: Scalar,
+    backend: str = "auto",
+    gains: Optional[jax.Array] = None,
+) -> Tuple[PyTree, jax.Array]:
+    """Aggregate + server SGD step: ``theta' = theta - alpha * u_k``.
+
+    Stacked form only (the fedpg round loop's uplink tail).  On the pallas
+    backend the whole chain — gain matvec, AWGN, debias, parameter update —
+    is ONE fused kernel pass (``ota_fused.fused_aggregate_sgd``); on xla it
+    is the bit-exact historical two-step (aggregate, then tree-mapped
+    update).  Returns ``(theta', h)``.
+    """
+    sp = _make_spec(cfg, None, False, backend)
+    if sp.exact or sp.resolved_backend() == "xla":
+        u, h = aggregate(grads, cfg, key=key, gains=gains,
+                         spec=replace(sp, backend="xla"))
+        return jax.tree.map(lambda p, x: p - alpha * x, params, u), h
+    return _aggregate_apply_pallas(cfg, key, grads, params, alpha,
+                                   gains=gains)
+
+
+# ---------------------------------------------------------------------------
+# Form 1 impl: stacked per-agent gradients (literal Algorithm 2).
 # ---------------------------------------------------------------------------
 
 def sample_gains(cfg: OTAConfig, key: jax.Array, n_agents: int) -> jax.Array:
@@ -160,10 +326,10 @@ def _server_epilogue(
     n_total: Scalar,
     n_agents: Optional[int],
 ) -> PyTree:
-    """The shared server-side tail of every aggregation form: AWGN on the
-    summed signal, then the update normalisation ``update_scale`` or
-    ``1 / (n_total * norm_const)``.  One copy keeps the three
-    equivalence-tested forms from drifting apart."""
+    """The shared server-side tail of every xla aggregation form: AWGN on
+    the summed signal, then the update normalisation ``update_scale`` or
+    ``1 / (n_total * norm_const)``.  One copy keeps the equivalence-tested
+    forms from drifting apart."""
     if _noise_enabled(cfg.noise_sigma):
         noise = tree_normal_like(key_n, v, cfg.noise_sigma)
         v = jax.tree.map(jnp.add, v, noise)
@@ -173,18 +339,22 @@ def _server_epilogue(
     return jax.tree.map(lambda x: x * scale, v)
 
 
-def aggregate_stacked(
+def _server_scale(cfg: OTAConfig, n_total: Scalar,
+                  n_agents: Optional[int]) -> Scalar:
+    """The epilogue's multiplicative constant, for backends that fuse it."""
+    if cfg.update_scale is not None:
+        return cfg.update_scale
+    return 1.0 / (n_total * cfg.norm_const_for(n_agents))
+
+
+def _aggregate_stacked_xla(
     cfg: OTAConfig,
     key: jax.Array,
     grads_stacked: PyTree,
     *,
-    gains: jax.Array | None = None,
+    gains: Optional[jax.Array] = None,
 ) -> Tuple[PyTree, jax.Array]:
-    """OTA-aggregate per-agent gradients stacked on a leading N axis.
-
-    Returns ``(u_k, h)`` where ``u_k = (sum_i h_i g_i + n_k) / (N * c)``,
-    ``c = m_h`` if debiasing else 1.
-    """
+    """u_k = (sum_i h_i g_i + n_k) / (N * c) as the historical XLA chain."""
     leading = jax.tree.leaves(grads_stacked)[0].shape[0]
     key_h, key_n = jax.random.split(key)
     h = sample_gains(cfg, key_h, leading) if gains is None else gains
@@ -197,13 +367,135 @@ def aggregate_stacked(
     return _server_epilogue(cfg, key_n, v, leading, leading), h
 
 
-def exact_aggregate(grads_stacked: PyTree) -> PyTree:
-    """Algorithm-1 baseline: exact mean of per-agent gradients (ideal uplink)."""
+def _exact_mean(grads_stacked: PyTree) -> PyTree:
+    """Algorithm-1 baseline: exact mean of per-agent gradients."""
     return jax.tree.map(lambda g: jnp.mean(g, axis=0), grads_stacked)
 
 
+def _exact_mean_axis_stacked(
+    local_grads: PyTree, axis_names: Tuple[str, ...],
+    n_agents: Optional[int],
+) -> PyTree:
+    """Exact global mean over shard-local agent stacks (psum of local
+    sums / N) — the op sequence the sharded fedpg round always used."""
+    n_local = jax.tree.leaves(local_grads)[0].shape[0]
+    if n_agents is None:
+        idx_stride = 1
+        for name in axis_names:
+            idx_stride = idx_stride * _axis_size(name)
+        n_total: Scalar = idx_stride * n_local
+    else:
+        n_total = n_agents
+    local_sum = jax.tree.map(lambda g: jnp.sum(g, axis=0), local_grads)
+    return jax.tree.map(
+        lambda s: jax.lax.psum(s, axis_names) / n_total, local_sum)
+
+
 # ---------------------------------------------------------------------------
-# Form 2: shard_map / psum (production data-parallel form).
+# Pallas backend: the fused kernel over the flattened parameter axis.
+# ---------------------------------------------------------------------------
+
+def _wire_dtype(cfg: OTAConfig):
+    if not cfg.wire_dtype:
+        return None
+    return jnp.dtype(cfg.wire_dtype)
+
+
+def _flatten_agent_stack(grads_stacked: PyTree):
+    """(pytree of (N, ...) leaves) -> ((N, P) f32, unflatten)."""
+    leaves, treedef = jax.tree.flatten(grads_stacked)
+    n = leaves[0].shape[0]
+    sizes = [int(leaf.size) // n for leaf in leaves]
+    flat = jnp.concatenate(
+        [leaf.reshape(n, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+
+    def unflatten(vec: jax.Array) -> PyTree:
+        parts = []
+        off = 0
+        for leaf, size in zip(leaves, sizes):
+            parts.append(
+                vec[off:off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, parts)
+
+    return flat, n, unflatten
+
+
+def _flatten_params(params: PyTree):
+    leaves, treedef = jax.tree.flatten(params)
+    sizes = [int(leaf.size) for leaf in leaves]
+    flat = jnp.concatenate(
+        [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+
+    def unflatten(vec: jax.Array) -> PyTree:
+        parts = []
+        off = 0
+        for leaf, size in zip(leaves, sizes):
+            parts.append(
+                vec[off:off + size].reshape(leaf.shape).astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, parts)
+
+    return flat, unflatten
+
+
+def _kernel_seed(key_n: jax.Array) -> jax.Array:
+    """A uint32 counter-PRNG seed derived from the server noise key."""
+    return jax.random.bits(key_n, (), jnp.uint32)
+
+
+def _aggregate_stacked_pallas(
+    cfg: OTAConfig,
+    key: jax.Array,
+    grads_stacked: PyTree,
+    *,
+    gains: Optional[jax.Array] = None,
+) -> Tuple[PyTree, jax.Array]:
+    from repro.kernels import ota_fused
+
+    flat, n, unflatten = _flatten_agent_stack(grads_stacked)
+    key_h, key_n = jax.random.split(key)
+    h = sample_gains(cfg, key_h, n) if gains is None else gains
+    u = ota_fused.fused_aggregate(
+        flat, h.astype(jnp.float32),
+        sigma=cfg.noise_sigma,
+        scale=_server_scale(cfg, n, n),
+        seed=_kernel_seed(key_n),
+        with_noise=_noise_enabled(cfg.noise_sigma),
+        wire_dtype=_wire_dtype(cfg),
+    )
+    return unflatten(u), h
+
+
+def _aggregate_apply_pallas(
+    cfg: OTAConfig,
+    key: jax.Array,
+    grads_stacked: PyTree,
+    params: PyTree,
+    alpha: Scalar,
+    *,
+    gains: Optional[jax.Array] = None,
+) -> Tuple[PyTree, jax.Array]:
+    from repro.kernels import ota_fused
+
+    flat, n, _ = _flatten_agent_stack(grads_stacked)
+    pflat, punflatten = _flatten_params(params)
+    key_h, key_n = jax.random.split(key)
+    h = sample_gains(cfg, key_h, n) if gains is None else gains
+    p_next = ota_fused.fused_aggregate_sgd(
+        flat, h.astype(jnp.float32), pflat,
+        alpha=alpha,
+        sigma=cfg.noise_sigma,
+        scale=_server_scale(cfg, n, n),
+        seed=_kernel_seed(key_n),
+        with_noise=_noise_enabled(cfg.noise_sigma),
+        wire_dtype=_wire_dtype(cfg),
+    )
+    return punflatten(p_next), h
+
+
+# ---------------------------------------------------------------------------
+# Form 2 impl: shard_map / psum (production data-parallel form).
 # ---------------------------------------------------------------------------
 
 def _flat_axis_index(axis_names: Sequence[str]) -> Tuple[jax.Array, Scalar]:
@@ -240,15 +532,15 @@ def local_gain(
     return c
 
 
-def psum_aggregate(
+def _psum_axis(
     cfg: OTAConfig,
     key: jax.Array,
     local_grad: PyTree,
-    axis_names: Sequence[str],
+    axis_names: Tuple[str, ...],
     *,
     n_agents: Optional[int] = None,
-) -> PyTree:
-    """OTA aggregation across mesh axes, to be called inside shard_map.
+) -> Tuple[PyTree, jax.Array]:
+    """OTA aggregation across mesh axes, called inside shard_map.
 
     The per-agent gain scaling happens *before* the psum, so OTA adds zero
     communication volume over exact data-parallel aggregation — which is the
@@ -259,7 +551,6 @@ def psum_aggregate(
     explicit ``update_scale`` (a traced count cannot key the closed-form
     effective moments).
     """
-    axis_names = tuple(axis_names)
     key_h, key_n = jax.random.split(key)
     h = local_gain(cfg, key_h, axis_names, n_agents)
     scaled = jax.tree.map(lambda g: g * h.astype(g.dtype), local_grad)
@@ -269,34 +560,32 @@ def psum_aggregate(
     n = n_agents
     if n is None and cfg.update_scale is None:  # only then is the count used
         n = _flat_axis_index(axis_names)[1]
-    return _server_epilogue(cfg, key_n, v, n, n_agents)
+    return _server_epilogue(cfg, key_n, v, n, n_agents), h
 
 
-def psum_aggregate_stacked(
+def _psum_axis_stacked(
     cfg: OTAConfig,
     key: jax.Array,
     local_grads: PyTree,
-    axis_names: Sequence[str],
+    axis_names: Tuple[str, ...],
     *,
     n_agents: Optional[int] = None,
 ) -> Tuple[PyTree, jax.Array]:
-    """:func:`psum_aggregate` for shards that each carry a *stack* of agents.
+    """The axis form for shards that each carry a *stack* of agents.
 
     ``local_grads`` leaves have a leading ``n_local`` axis (this shard's
     slice of the agent axis).  Gains are drawn exactly like ``local_gain``
     but keyed on the *global* agent index ``shard_index * n_local + j`` —
-    with one agent per shard the stream is identical to
-    :func:`psum_aggregate`.  Each shard reduces its gain-weighted stack
-    locally, ``psum``s across the mesh axes, and applies the shared AWGN +
-    normalisation once.  This is the agent-axis sharding hook
-    ``fedpg.make_round_fn`` uses, so ``HeterogeneousEnv`` fleets and
-    per-agent power control (``HeterogeneousBudget``) run in their
-    production shard_map form.
+    with one agent per shard the stream is identical to the plain axis
+    form.  Each shard reduces its gain-weighted stack locally, ``psum``s
+    across the mesh axes, and applies the shared AWGN + normalisation once.
+    This is the agent-axis sharding hook ``fedpg.make_round_fn`` uses, so
+    ``HeterogeneousEnv`` fleets and per-agent power control
+    (``HeterogeneousBudget``) run in their production shard_map form.
 
     Returns ``(update, h_local)``; ``h_local`` is this shard's (n_local,)
     gain slice (psum its sum for the global gain mean).
     """
-    axis_names = tuple(axis_names)
     n_local = jax.tree.leaves(local_grads)[0].shape[0]
     key_h, key_n = jax.random.split(key)
     idx, stride = _flat_axis_index(axis_names)
@@ -317,6 +606,66 @@ def psum_aggregate_stacked(
 
     v = jax.lax.psum(jax.tree.map(_combine, local_grads), axis_names)
     return _server_epilogue(cfg, key_n, v, n_total, n_agents), h
+
+
+# ---------------------------------------------------------------------------
+# Deprecated entry points — thin wrappers over the dispatcher-era impls.
+# New in-repo code must use :func:`aggregate`; CI lints for fresh callers
+# (tools/lint_aggregation_api.py).
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"ota.{name} is deprecated; use ota.aggregate({repl})",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
+def aggregate_stacked(
+    cfg: OTAConfig,
+    key: jax.Array,
+    grads_stacked: PyTree,
+    *,
+    gains: Optional[jax.Array] = None,
+) -> Tuple[PyTree, jax.Array]:
+    """Deprecated: ``aggregate(grads, cfg, key=key, backend="xla")``."""
+    _warn_deprecated("aggregate_stacked", "grads, cfg, key=key")
+    return _aggregate_stacked_xla(cfg, key, grads_stacked, gains=gains)
+
+
+def exact_aggregate(grads_stacked: PyTree) -> PyTree:
+    """Deprecated: ``aggregate(grads, None)[0]``."""
+    _warn_deprecated("exact_aggregate", "grads, None")
+    return _exact_mean(grads_stacked)
+
+
+def psum_aggregate(
+    cfg: OTAConfig,
+    key: jax.Array,
+    local_grad: PyTree,
+    axis_names: Sequence[str],
+    *,
+    n_agents: Optional[int] = None,
+) -> PyTree:
+    """Deprecated: ``aggregate(grads, cfg, key=key, axis=axis_names)[0]``."""
+    _warn_deprecated("psum_aggregate", "grads, cfg, key=key, axis=...")
+    return _psum_axis(cfg, key, local_grad, tuple(axis_names),
+                      n_agents=n_agents)[0]
+
+
+def psum_aggregate_stacked(
+    cfg: OTAConfig,
+    key: jax.Array,
+    local_grads: PyTree,
+    axis_names: Sequence[str],
+    *,
+    n_agents: Optional[int] = None,
+) -> Tuple[PyTree, jax.Array]:
+    """Deprecated: ``aggregate(..., axis=..., local_stack=True)``."""
+    _warn_deprecated("psum_aggregate_stacked",
+                     "grads, cfg, key=key, axis=..., local_stack=True")
+    return _psum_axis_stacked(cfg, key, local_grads, tuple(axis_names),
+                              n_agents=n_agents)
 
 
 # ---------------------------------------------------------------------------
@@ -342,16 +691,29 @@ def example_weights(
 
 
 def add_awgn(
-    cfg: OTAConfig, key: jax.Array, grad: PyTree, n_agents: int
+    cfg: OTAConfig, key: jax.Array, grad: PyTree, n_agents: int,
+    *, backend: str = "xla",
 ) -> PyTree:
     """Apply the server-side AWGN and normalisation to a weighted-loss grad.
 
     ``grad`` must already equal ``(1/N) sum_i h_i g_i`` (from the weighted
     loss); this adds ``n_k / N`` and optionally debiases by ``m_h``.  An
     ``update_scale`` override (``1 / (N * c)`` over the raw sum) is honoured
-    here as the equivalent ``N * update_scale`` factor, keeping the three
+    here as the equivalent ``N * update_scale`` factor, keeping the
     aggregation forms interchangeable for sweep-built configs.
+
+    ``backend="pallas"`` (or ``"auto"`` on TPU) runs the whole epilogue as
+    one fused-kernel pass over the flattened gradient — the LLM trainer's
+    server tail at transformer scale; the noise then comes from the kernel's
+    counter PRNG (same distribution, different stream than xla threefry).
     """
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {_BACKENDS}")
+    be = backend
+    if be == "auto":
+        be = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if be == "pallas":
+        return _add_awgn_pallas(cfg, key, grad, n_agents)
     if _noise_enabled(cfg.noise_sigma):
         noise = tree_normal_like(key, grad, cfg.noise_sigma / n_agents)
         grad = jax.tree.map(jnp.add, grad, noise)
@@ -362,3 +724,29 @@ def add_awgn(
         inv = 1.0 / cfg.norm_const_for(n_agents)
         grad = jax.tree.map(lambda x: x * inv, grad)
     return grad
+
+
+def _add_awgn_pallas(
+    cfg: OTAConfig, key: jax.Array, grad: PyTree, n_agents: int
+) -> PyTree:
+    """The weighted-loss server epilogue as one fused kernel pass: the
+    already-averaged gradient enters as a single-"agent" stack with unit
+    gain, sigma/N noise, and the Form-3 normalisation."""
+    from repro.kernels import ota_fused
+
+    flat, unflatten = _flatten_params(grad)
+    if cfg.update_scale is not None:
+        scale: Scalar = n_agents * cfg.update_scale
+    elif cfg.debias:
+        scale = 1.0 / cfg.norm_const_for(n_agents)
+    else:
+        scale = 1.0
+    u = ota_fused.fused_aggregate(
+        flat.reshape(1, -1), jnp.ones((1,), jnp.float32),
+        sigma=jnp.asarray(cfg.noise_sigma, jnp.float32) / n_agents,
+        scale=scale,
+        seed=_kernel_seed(key),
+        with_noise=_noise_enabled(cfg.noise_sigma),
+        wire_dtype=_wire_dtype(cfg),
+    )
+    return unflatten(u)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ota_channel as _ota
+from repro.kernels import ota_fused as _fused
 from repro.kernels import ref as _ref
 from repro.kernels import ssd_scan as _ssd
 
@@ -72,3 +73,65 @@ def ota_update(
     return _ref.ota_channel_ref(
         v, noise, sigma=sigma, n_agents=n_agents, m_h=m_h, debias=debias
     )
+
+
+def ota_aggregate(
+    grads: jax.Array,          # (n_agents, n_params) stacked flat gradients
+    gains: jax.Array,          # (n_agents,)
+    *,
+    sigma=0.0,
+    scale=1.0,
+    seed=0,
+    with_noise: Optional[bool] = None,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    block_rows: Optional[int] = None,
+    wire_dtype=None,
+) -> jax.Array:
+    """The whole uplink — gain matvec + AWGN + debias — in one pass.
+
+    ``use_pallas=False`` runs the jnp oracle with a threefry noise draw
+    (different stream than the kernel's counter PRNG — reference numerics,
+    not a bitwise twin; parity tests feed the oracle the kernel's own noise).
+    """
+    if use_pallas:
+        return _fused.fused_aggregate(
+            grads, gains, sigma=sigma, scale=scale, seed=seed,
+            with_noise=with_noise, block_rows=block_rows,
+            wire_dtype=wire_dtype, interpret=interpret,
+        )
+    noise = None
+    if with_noise or (with_noise is None):
+        noise = jax.random.normal(
+            jax.random.key(seed), (grads.shape[1],), jnp.float32)
+    return _ref.ota_fused_ref(grads, gains, noise, sigma=sigma, scale=scale)
+
+
+def ota_aggregate_sgd(
+    grads: jax.Array,
+    gains: jax.Array,
+    params: jax.Array,
+    *,
+    alpha,
+    sigma=0.0,
+    scale=1.0,
+    seed=0,
+    with_noise: Optional[bool] = None,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+    block_rows: Optional[int] = None,
+    wire_dtype=None,
+) -> jax.Array:
+    """Uplink + server SGD step fused: p' = p - alpha * u."""
+    if use_pallas:
+        return _fused.fused_aggregate_sgd(
+            grads, gains, params, alpha=alpha, sigma=sigma, scale=scale,
+            seed=seed, with_noise=with_noise, block_rows=block_rows,
+            wire_dtype=wire_dtype, interpret=interpret,
+        )
+    noise = None
+    if with_noise or (with_noise is None):
+        noise = jax.random.normal(
+            jax.random.key(seed), (grads.shape[1],), jnp.float32)
+    return _ref.ota_fused_sgd_ref(
+        grads, gains, params, noise, alpha=alpha, sigma=sigma, scale=scale)

@@ -81,6 +81,57 @@ def ssd_sequential_ref(x, dt, A, B, C):
     return jnp.moveaxis(ys, 0, 1)                   # (b,s,h,p)
 
 
+def ota_fused_ref(
+    grads: jax.Array,     # (n_agents, n_params) — stacked flat gradients
+    gains: jax.Array,     # (n_agents,)
+    noise: Optional[jax.Array] = None,   # (n_params,) std normal, or None
+    *,
+    sigma=0.0,
+    scale=1.0,
+) -> jax.Array:
+    """u = (sum_i h_i g_i + sigma*n) * scale — the fused-kernel definition.
+
+    Op order mirrors ``ota_fused._fused_kernel`` exactly (f32 matvec, then
+    noise FMA, then scale) so fp32 parity is bitwise in interpret mode; the
+    caller supplies the kernel's own counter-PRNG ``noise`` realisation when
+    checking the noisy path (tests extract it with the zero-gradient trick).
+    """
+    v = jax.lax.dot_general(
+        gains.astype(jnp.float32).reshape(1, -1), grads.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(-1)
+    if noise is not None:
+        v = v + jnp.asarray(sigma, jnp.float32) * noise.astype(jnp.float32)
+    return v * jnp.asarray(scale, jnp.float32)
+
+
+def ota_fused_sgd_ref(grads, gains, params, noise=None, *, alpha,
+                      sigma=0.0, scale=1.0) -> jax.Array:
+    """p' = p - alpha*u over :func:`ota_fused_ref` (same op order as the
+    kernel's sgd mode; compare under jit — XLA contracts the multiply-
+    subtract into one FMA exactly as the kernel body does)."""
+    u = ota_fused_ref(grads, gains, noise, sigma=sigma, scale=scale)
+    return params.astype(jnp.float32) - jnp.asarray(alpha, jnp.float32) * u
+
+
+def ota_fused_adam_ref(grads, gains, params, mu, nu, noise=None, *, alpha,
+                       step, b1=0.9, b2=0.999, eps=1e-8, sigma=0.0,
+                       scale=1.0):
+    """Aggregation + bias-corrected Adam on the fused update — mirrors
+    ``ota_fused.fused_aggregate_adam`` (and ``optim.optimizers._adam_core``
+    with weight_decay=0) op for op.  Returns (p', mu', nu')."""
+    f32 = jnp.float32
+    u = ota_fused_ref(grads, gains, noise, sigma=sigma, scale=scale)
+    a, b1, b2, eps = (jnp.asarray(x, f32) for x in (alpha, b1, b2, eps))
+    t = jnp.asarray(step, f32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    mu_n = b1 * mu.astype(f32) + (1.0 - b1) * u
+    nu_n = b2 * nu.astype(f32) + (1.0 - b2) * jnp.square(u)
+    delta = -(a * (mu_n / c1) / (jnp.sqrt(nu_n / c2) + eps))
+    return params.astype(f32) + delta, mu_n, nu_n
+
+
 def ota_channel_ref(
     v: jax.Array,         # aggregated sum_i h_i g_i (any shape)
     noise: jax.Array,     # standard normal, same shape

@@ -1,8 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.utils import platform as rplat
+rplat.set_host_device_count(512)
 
-# NOTE: the two lines above MUST be the first statements in this module —
-# jax locks the device count on first init (see module docstring below).
+# NOTE: the lines above MUST be the first statements in this module — jax
+# locks the device count on first init (see module docstring below);
+# repro.utils.platform is import-light (no jax at module scope).
 
 _DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
 
@@ -43,7 +45,9 @@ from repro.utils import shard_hints
 from repro.optim.optimizers import OptState
 from repro.train import server, trainer
 from repro.utils import hlo as hlo_lib
-from repro.utils.roofline import RooflineReport, model_flops_per_step
+from repro.utils.roofline import (
+    RooflineReport, model_flops_per_step, ota_fused_cost,
+)
 from repro.utils.tree import tree_bytes
 
 
@@ -371,6 +375,14 @@ def analyze(lowered, compiled, cfg, shape, mesh_name: str, n_chips: int,
         model_flops=mf_total / n_chips,
     ).finalize()
 
+    # the uplink's own roofline: what the fused OTA kernel should cost on
+    # this model vs the unfused XLA chain (benchmarks/ota_kernel.py measures
+    # the same pair, so dry-run estimates and bench numbers line up)
+    ota_est = None
+    if shape.kind == "train":
+        ota_est = ota_fused_cost(
+            total, int(extra.get("n_agents", 1)), mode="adam")
+
     record = {
         "arch": cfg.arch_id,
         "shape": shape.name,
@@ -379,6 +391,7 @@ def analyze(lowered, compiled, cfg, shape, mesh_name: str, n_chips: int,
         "n_chips": n_chips,
         "params_total": total,
         "params_active": active,
+        "ota_fused_roofline": ota_est,
         "cost_analysis": {k: float(v) for k, v in cost.items()
                           if isinstance(v, (int, float))},
         "collectives_rolled": {

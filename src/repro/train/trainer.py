@@ -55,6 +55,9 @@ class TrainConfig:
     microbatch: int = 1                # gradient-accumulation steps
     grad_accum_dtype: str = ""         # "" = param dtype; "float32" for exact
     seed: int = 0
+    # uplink implementation ------------------------------------------------
+    ota_backend: str = "auto"          # "xla" | "pallas" | "auto"
+    wire_dtype: str = ""               # pallas uplink payload ("bfloat16")
 
     def ota_config(self) -> Optional[ota.OTAConfig]:
         if self.aggregator == "exact":
@@ -66,6 +69,7 @@ class TrainConfig:
             channel=ch,
             noise_sigma=noise_sigma_from_db(self.noise_db),
             debias=self.debias,
+            wire_dtype=self.wire_dtype,
         )
 
 
@@ -163,7 +167,8 @@ def make_train_step(model: Model, tcfg: TrainConfig):
 
         # --- the paper's uplink: server AWGN + optional m_h debias --------
         if ota_cfg is not None:
-            grads = ota.add_awgn(ota_cfg, key_n, grads, n)
+            grads = ota.add_awgn(ota_cfg, key_n, grads, n,
+                                 backend=tcfg.ota_backend)
 
         grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
         updates, opt_state = opt.update(grads, state.opt_state, state.params)
@@ -189,8 +194,8 @@ def make_train_step(model: Model, tcfg: TrainConfig):
 # ---------------------------------------------------------------------------
 
 def make_psum_train_step(model: Model, tcfg: TrainConfig, mesh, data_axes=("data",)):
-    """Per-shard gradients aggregated with ota.psum_aggregate inside
-    shard_map — the literal Eq. (6) dataflow.  Model axes must be unsharded
+    """Per-shard gradients aggregated with ``ota.aggregate`` (axis form)
+    inside shard_map — the literal Eq. (6) dataflow.  Model axes must be unsharded
     (pure DP); used for equivalence tests and the paper-faithful RL-scale
     runs, not for the tensor-parallel production meshes."""
     from jax.sharding import PartitionSpec as P
@@ -211,8 +216,7 @@ def make_psum_train_step(model: Model, tcfg: TrainConfig, mesh, data_axes=("data
             return loss_fn(p, mb, None)
 
         loss, g = jax.value_and_grad(lf)(params)
-        g = ota.psum_aggregate(ota_cfg, key, g, axes) if ota_cfg is not None \
-            else jax.lax.pmean(g, axes)
+        g = ota.aggregate(g, ota_cfg, key=key, axis=axes)[0]
         return loss, g
 
     def train_step(state: TrainState, batch, key: jax.Array):

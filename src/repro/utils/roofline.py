@@ -65,6 +65,63 @@ class RooflineReport:
         return asdict(self)
 
 
+def ota_fused_cost(
+    n_params: int,
+    n_agents: int,
+    *,
+    wire_bytes: int = 4,
+    with_noise: bool = True,
+    mode: str = "sgd",
+) -> dict:
+    """Analytic flop/byte estimate for the fused OTA aggregation kernel
+    (``repro.kernels.ota_fused``) vs the unfused XLA op chain.
+
+    The fused kernel streams the (N, P) gradient stack once and writes one
+    P-vector (plus the optimizer state it updates in the same pass); the
+    XLA chain additionally materialises the weighted sum, the sampled noise
+    tensor, and the scaled update as separate HBM round trips.  Per
+    element: 2N flops for the gain matvec, ~25 for the counter-PRNG
+    Box-Muller draw, and a handful for scale/update.
+
+    Returns a dict with ``flops``, ``fused_bytes``, ``xla_bytes``,
+    ``fused_s`` / ``xla_s`` (HBM-bound roofline times on v5e) and
+    ``speedup_est`` — the numbers ``launch/dryrun.py`` records and
+    ``benchmarks/ota_kernel.py`` measures against.
+    """
+    p = float(n_params)
+    n = float(n_agents)
+    state = {"agg": 0, "sgd": 1, "adam": 3}[mode]  # extra P-vectors touched
+    flops = p * (2.0 * n + (25.0 if with_noise else 0.0)
+                 + {"agg": 1, "sgd": 3, "adam": 12}[mode])
+    # fused: read the wire-format stack once, read+write each state vector
+    fused_bytes = p * n * wire_bytes + p * 4.0 * (1.0 + 2.0 * state)
+    # XLA chain: gain-weighted reduce (read stack, write sum), noise
+    # materialise (write + read), add (read sum, write), scale (read,
+    # write), then the update's read-modify-write per state vector
+    xla_bytes = (
+        p * n * 4.0                     # read fp32 stack for the reduce
+        + p * 4.0 * 2.0                 # write sum + re-read for noise add
+        + (p * 4.0 * 2.0 if with_noise else 0.0)   # noise write + read
+        + p * 4.0 * 2.0                 # scale pass
+        + p * 4.0 * 2.0 * max(state, 1)  # update read-modify-write
+    )
+    fused_s = fused_bytes / HBM_BW
+    xla_s = xla_bytes / HBM_BW
+    return {
+        "n_params": int(n_params),
+        "n_agents": int(n_agents),
+        "mode": mode,
+        "wire_bytes": int(wire_bytes),
+        "flops": flops,
+        "fused_bytes": fused_bytes,
+        "xla_bytes": xla_bytes,
+        "fused_s": fused_s,
+        "xla_s": xla_s,
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "speedup_est": xla_s / fused_s if fused_s else 0.0,
+    }
+
+
 def model_flops_per_step(
     *,
     n_params_active: int,

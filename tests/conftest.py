@@ -1,14 +1,25 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see 1 device; only launch/dryrun.py forces 512 host devices (in its own
-process), and CI's mesh job runs tests/test_distribute.py + the golden suite
-in a separate process with ``--xla_force_host_platform_device_count=8``.
+"""Shared fixtures. NOTE: no hardcoded XLA_FLAGS here — smoke tests and
+benches must see 1 device by default; only launch/dryrun.py forces 512 host
+devices (in its own process).  Multi-device jobs (CI's mesh tier running
+tests/test_distribute.py + the golden suite) opt in per process with
+``REPRO_EMULATED_DEVICES=8`` (or the legacy
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), applied below via
+``repro.utils.platform`` before jax initialises.
 
 Marker policy: ``slow`` and ``bench`` tests are deselected by default via
 ``addopts = -m 'not slow and not bench'`` in pyproject.toml (the tier-1
 gate).  Run the full suite with ``pytest -m ""``.
 """
-import jax
-import pytest
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.utils import platform as rplat  # noqa: E402  (pre-jax import)
+
+rplat.apply_emulated_devices()
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
 
 
 def pytest_addoption(parser):

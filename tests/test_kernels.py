@@ -217,3 +217,164 @@ def test_ops_dispatch_agreement():
     a = ops.attention(q, k, v, use_pallas=True)
     b = ops.attention(q, k, v, use_pallas=False)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused OTA aggregation (ota_fused.py): gain matvec + AWGN + debias (+update)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ota_fused
+
+
+def _grad_stack(key, n_agents, n_params):
+    return jax.random.normal(key, (n_agents, n_params), jnp.float32)
+
+
+def _fused_noise(n_params, seed, block_rows=None):
+    """The fused kernel's AWGN stream, extracted through the kernel itself:
+    zero gradients, one unit-gain agent, sigma=1, scale=1 make the aggregate
+    return exactly the noise vector (u = (0 + 1*n) * 1)."""
+    z = jnp.zeros((1, n_params), jnp.float32)
+    return ota_fused.fused_aggregate(
+        z, jnp.ones((1,), jnp.float32), sigma=1.0, scale=1.0, seed=seed,
+        with_noise=True, block_rows=block_rows)
+
+
+@pytest.mark.parametrize("seed", [0, 123])
+@pytest.mark.parametrize("scale", [1.0, 1.0 / (7 * 1.2533)])
+@pytest.mark.parametrize("sigma", [0.0, 0.5, 2.0])
+@pytest.mark.parametrize("block_rows", [8, 64])
+def test_fused_aggregate_parity_bitwise(sigma, scale, seed, block_rows):
+    """fused_aggregate == ref.ota_fused_ref BITWISE in fp32: same matvec,
+    same noise realisation (extracted from the kernel), same op order."""
+    n_agents, n_params = 7, 1000   # deliberately unaligned with 128 lanes
+    g = _grad_stack(jax.random.key(seed + 1), n_agents, n_params)
+    h = jax.random.normal(jax.random.key(seed + 2), (n_agents,), jnp.float32)
+    with_noise = sigma > 0.0
+    noise = _fused_noise(n_params, seed, block_rows) if with_noise else None
+    out = ota_fused.fused_aggregate(
+        g, h, sigma=sigma, scale=scale, seed=seed, with_noise=with_noise,
+        block_rows=block_rows)
+    expected = ref.ota_fused_ref(g, h, noise, sigma=sigma, scale=scale)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+@pytest.mark.parametrize("sigma", [0.0, 0.7])
+def test_fused_sgd_parity(sigma):
+    """sgd mode vs the oracle: one fused-multiply-add of slack — the
+    kernel's interpret-mode p - alpha*u contracts into an FMA where the
+    eager oracle keeps separate ops (tests/README.md tolerance policy)."""
+    n_agents, n_params = 5, 777
+    g = _grad_stack(jax.random.key(3), n_agents, n_params)
+    h = jax.random.normal(jax.random.key(4), (n_agents,), jnp.float32)
+    p = jax.random.normal(jax.random.key(5), (n_params,), jnp.float32)
+    with_noise = sigma > 0.0
+    noise = _fused_noise(n_params, 9) if with_noise else None
+    out = ota_fused.fused_aggregate_sgd(
+        g, h, p, alpha=0.05, sigma=sigma, scale=0.2, seed=9,
+        with_noise=with_noise)
+    expected = ref.ota_fused_sgd_ref(
+        g, h, p, noise, alpha=0.05, sigma=sigma, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("step", [1, 10])
+def test_fused_adam_parity(step):
+    """adam mode vs the oracle (which mirrors optimizers._adam_core):
+    bias-corrected moments and step, one-FMA slack in fp32."""
+    n_agents, n_params = 4, 513
+    g = _grad_stack(jax.random.key(6), n_agents, n_params)
+    h = jnp.abs(jax.random.normal(jax.random.key(7), (n_agents,))) + 0.1
+    ks = jax.random.split(jax.random.key(8), 3)
+    p = jax.random.normal(ks[0], (n_params,), jnp.float32)
+    mu = jax.random.normal(ks[1], (n_params,), jnp.float32) * 0.1
+    nu = jnp.abs(jax.random.normal(ks[2], (n_params,))) * 0.01
+    kw = dict(alpha=1e-3, step=step, b1=0.9, b2=0.999, eps=1e-8,
+              sigma=0.4, scale=0.25)
+    noise = _fused_noise(n_params, 21)
+    outs = ota_fused.fused_aggregate_adam(g, h, p, mu, nu, seed=21,
+                                          with_noise=True, **kw)
+    refs = ref.ota_fused_adam_ref(g, h, p, mu, nu, noise, **kw)
+    for a, b in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fused_adam_matches_optimizer_semantics():
+    """The fused adam on a noiseless unit-gain single agent == applying
+    repro.optim.optimizers.adam to the same (scaled) gradient."""
+    from repro.optim.optimizers import adam
+
+    n_params = 321
+    g = jax.random.normal(jax.random.key(10), (1, n_params), jnp.float32)
+    p = jax.random.normal(jax.random.key(11), (n_params,), jnp.float32)
+    opt = adam(1e-3)
+    state = opt.init(p)
+    upd, state = opt.update(g[0], state)
+    expected = p + upd
+    out_p, _, _ = ota_fused.fused_aggregate_adam(
+        g, jnp.ones((1,)), p, jnp.zeros_like(p), jnp.zeros_like(p),
+        alpha=1e-3, step=1, with_noise=False)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(expected),
+                               rtol=2e-6, atol=2e-7)
+
+
+def test_fused_block_shape_invariance_and_seed_decorrelation():
+    """Noise is keyed on the absolute flat element index: any block_rows
+    gives bitwise-identical output; different seeds decorrelate."""
+    n_agents, n_params = 3, 70000
+    g = _grad_stack(jax.random.key(12), n_agents, n_params)
+    h = jax.random.normal(jax.random.key(13), (n_agents,), jnp.float32)
+    kw = dict(sigma=0.7, scale=0.1, with_noise=True)
+    a = ota_fused.fused_aggregate(g, h, seed=11, block_rows=16, **kw)
+    b = ota_fused.fused_aggregate(g, h, seed=11, block_rows=128, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = ota_fused.fused_aggregate(g, h, seed=12, block_rows=16, **kw)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_fused_bf16_wire_tolerance():
+    """bf16 wire format: payload narrowed, accumulation f32.  Documented
+    tolerance ~1e-2 relative (tests/README.md) vs the f32 wire result."""
+    n_agents, n_params = 8, 4096
+    g = _grad_stack(jax.random.key(14), n_agents, n_params) * 1e-2
+    h = jax.random.normal(jax.random.key(15), (n_agents,), jnp.float32)
+    f32 = ota_fused.fused_aggregate(g, h, scale=0.125, with_noise=False)
+    bf16 = ota_fused.fused_aggregate(g, h, scale=0.125, with_noise=False,
+                                     wire_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(bf16), np.asarray(f32),
+                               rtol=2e-2, atol=1e-4)
+    assert not np.array_equal(np.asarray(bf16), np.asarray(f32))
+
+
+def test_fused_vmap_folds_lanes_into_grid():
+    """Sweep-lane batching: vmap over per-lane (sigma, scale, seed) equals
+    the per-lane loop bitwise — the Pallas batching rule folds the lane
+    axis into the kernel grid."""
+    n_agents, n_params, lanes = 4, 800, 3
+    g = _grad_stack(jax.random.key(16), n_agents, n_params)
+    h = jax.random.normal(jax.random.key(17), (n_agents,), jnp.float32)
+    sigmas = jnp.array([0.1, 0.5, 1.5], jnp.float32)
+    scales = jnp.array([1.0, 0.25, 0.05], jnp.float32)
+    seeds = jnp.arange(lanes, dtype=jnp.uint32)
+
+    def one(sigma, scale, seed):
+        return ota_fused.fused_aggregate(
+            g, h, sigma=sigma, scale=scale, seed=seed, with_noise=True,
+            block_rows=8)
+
+    batched = jax.vmap(one)(sigmas, scales, seeds)
+    looped = jnp.stack([one(sigmas[i], scales[i], seeds[i])
+                        for i in range(lanes)])
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(looped))
+
+
+def test_ops_fused_dispatch_agreement():
+    """ops.ota_aggregate: pallas and ref paths agree given the same noise
+    (noiseless here; the noisy streams differ by design)."""
+    g = _grad_stack(jax.random.key(18), 6, 500)
+    h = jax.random.normal(jax.random.key(19), (6,), jnp.float32)
+    a = ops.ota_aggregate(g, h, scale=0.2, with_noise=False, use_pallas=True)
+    b = ops.ota_aggregate(g, h, scale=0.2, with_noise=False, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
