@@ -1,0 +1,47 @@
+"""``repro.analyze``: the repo's static contract checker.
+
+Two layers behind one CLI (``python -m repro.analyze``):
+
+* **AST rules** (:mod:`repro.analyze.engine`, :mod:`repro.analyze.rules`)
+  parse every Python file under ``src/``, ``benchmarks/``, ``examples/``
+  and flag source-level hazards: PRNG key reuse, deprecated aggregation
+  callers, numpy/``float()``/``if`` on traced values, ``jax.jit`` in
+  loops, ad-hoc ``XLA_FLAGS`` surgery.  No jax import — pre-commit cheap.
+* **Trace-level contracts** (:mod:`repro.analyze.contracts`) import the
+  real registries and trace representative programs: the bitwise-lane
+  packing contract, the sanctioned-narrowing wire-dtype rule, compile
+  budgets (:mod:`repro.analyze.budget`), and the agent-mesh collective
+  audit.
+
+Both layers emit :class:`~repro.analyze.findings.Finding` records into one
+:class:`~repro.analyze.findings.Report` (text + ``ANALYZE_report.json``);
+``# repro: noqa[rule-id]`` suppresses AST findings inline.  CI runs
+``python -m repro.analyze --strict`` and fails on any finding.
+"""
+from repro.analyze.engine import (  # noqa: F401
+    DEFAULT_ROOTS, repo_root, scan, scan_source,
+)
+from repro.analyze.findings import Finding, Report  # noqa: F401
+from repro.analyze.rules import (  # noqa: F401
+    Rule, all_rules, get_rules, register_rule,
+)
+
+__all__ = [
+    "DEFAULT_ROOTS", "Finding", "Report", "Rule", "all_rules", "get_rules",
+    "register_rule", "repo_root", "run", "scan", "scan_source",
+]
+
+
+def run(targets=None, *, rules=None, ast_only: bool = False,
+        checks=None) -> "Report":
+    """One full analyzer pass: AST scan + (unless ``ast_only``) contracts.
+
+    The importable equivalent of the CLI; ``repro.analyze.contracts`` is
+    imported lazily so AST-only callers never touch jax.
+    """
+    report = scan(repo_root(), targets or DEFAULT_ROOTS, rules=rules)
+    if not ast_only:
+        from repro.analyze.contracts import run_contracts
+
+        run_contracts(report, checks=checks)
+    return report

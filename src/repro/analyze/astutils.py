@@ -1,0 +1,199 @@
+"""Shared AST analyses for the rule engine.
+
+Rules receive a :class:`ModuleContext` — one parsed module plus the
+lazily-computed analyses every rule needs:
+
+* ``dotted_name(node)`` — best-effort dotted name of a ``Name``/``Attribute``
+  chain (``jax.lax.scan``), empty string otherwise;
+* ``ctx.traced_functions`` — the set of function/lambda nodes that run under
+  a JAX trace: decorated with ``jit``-likes, passed as callables to tracing
+  entry points (``jit``/``vmap``/``scan``/``shard_map``/``pallas_call``/…),
+  or lexically nested inside either;
+* ``ctx.parents`` — child -> parent AST links, for ancestor queries.
+
+The analysis is deliberately heuristic (no interprocedural dataflow): rules
+built on it aim for high precision on this repo's idioms, with
+``# repro: noqa[rule-id]`` as the escape hatch for deliberate exceptions.
+No jax import happens anywhere in the AST layer — it must stay cheap enough
+to run as a pre-commit-grade lint.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# Call targets whose function-valued arguments run under a JAX trace.  A
+# dotted name matches if it equals an entry or ends with "." + entry.
+TRACE_ENTRIES = frozenset({
+    "jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap", "pmap",
+    "jax.grad", "grad", "jax.value_and_grad", "value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.linearize",
+    "jax.make_jaxpr", "make_jaxpr", "jax.checkpoint", "jax.remat",
+    "lax.scan", "lax.map", "lax.cond", "lax.while_loop", "lax.fori_loop",
+    "lax.switch", "lax.associative_scan", "lax.custom_root",
+    "shard_map", "pallas_call", "jax.eval_shape", "eval_shape",
+})
+
+# Decorators that make the decorated function a traced function.
+TRACE_DECORATORS = frozenset({
+    "jax.jit", "jit", "jax.checkpoint", "jax.remat", "jax.custom_jvp",
+    "jax.custom_vjp", "jax.vmap", "jax.pmap",
+})
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.lax.scan`` for a Name/Attribute chain; "" when not a chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def matches(dotted: str, entries: frozenset) -> bool:
+    """Whether a dotted name is one of ``entries`` (exact or suffix)."""
+    if not dotted:
+        return False
+    if dotted in entries:
+        return True
+    return any(dotted.endswith("." + e) for e in entries)
+
+
+def _is_trace_decorator(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        # @partial(jax.jit, ...) / @functools.partial(jax.jit, ...)
+        if dotted_name(dec.func).rsplit(".", 1)[-1] == "partial" and dec.args:
+            return matches(dotted_name(dec.args[0]), TRACE_DECORATORS)
+        return matches(dotted_name(dec.func), TRACE_DECORATORS)
+    return matches(dotted_name(dec), TRACE_DECORATORS)
+
+
+@dataclass
+class ModuleContext:
+    """One parsed module plus the lazily-computed shared analyses."""
+
+    path: pathlib.Path           # absolute
+    relpath: str                 # repo-relative posix path
+    tree: ast.Module
+    source_lines: List[str]
+    _parents: Optional[Dict[ast.AST, ast.AST]] = field(default=None,
+                                                       repr=False)
+    _traced: Optional[Set[ast.AST]] = field(default=None, repr=False)
+
+    def finding(self, rule, node: ast.AST, message: str,
+                severity: Optional[str] = None):
+        from repro.analyze.findings import Finding
+
+        return Finding(
+            rule=rule.id, severity=severity or rule.severity,
+            path=self.relpath, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), message=message,
+        )
+
+    @property
+    def parents(self) -> Dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {
+                child: parent
+                for parent in ast.walk(self.tree)
+                for child in ast.iter_child_nodes(parent)
+            }
+        return self._parents
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST):
+        for anc in self.ancestors(node):
+            if isinstance(anc, FuncNode):
+                return anc
+        return None
+
+    @property
+    def traced_functions(self) -> Set[ast.AST]:
+        """Function/Lambda nodes that (heuristically) run under a trace."""
+        if self._traced is not None:
+            return self._traced
+
+        by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(node.name, []).append(node)
+
+        traced: Set[ast.AST] = set()
+        # (a) trace-decorated defs
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_trace_decorator(d) for d in node.decorator_list):
+                    traced.add(node)
+        # (b) function-valued arguments of tracing entry points
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and matches(dotted_name(node.func), TRACE_ENTRIES)):
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in args:
+                if isinstance(arg, ast.Lambda):
+                    traced.add(arg)
+                elif isinstance(arg, ast.Name) and arg.id in by_name:
+                    traced.update(by_name[arg.id])
+        # (c) everything lexically nested inside a traced function
+        frontier = list(traced)
+        while frontier:
+            fn = frontier.pop()
+            for sub in ast.walk(fn):
+                if isinstance(sub, FuncNode) and sub not in traced:
+                    traced.add(sub)
+                    frontier.append(sub)
+        self._traced = traced
+        return traced
+
+    def in_traced_function(self, node: ast.AST) -> bool:
+        fn = self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced_functions:
+                return True
+            fn = self.enclosing_function(fn)
+        return False
+
+    def traced_param_names(self, node: ast.AST) -> Set[str]:
+        """Parameter names of every traced function enclosing ``node`` —
+        the names most likely bound to tracers at runtime."""
+        names: Set[str] = set()
+        fn = self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced_functions:
+                names |= param_names(fn)
+            fn = self.enclosing_function(fn)
+        return names
+
+
+def param_names(fn: ast.AST) -> Set[str]:
+    """Positional/keyword parameter names of a function/lambda node."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def parse_module(path: pathlib.Path, relpath: str) -> Optional[ModuleContext]:
+    try:
+        source = path.read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    return ModuleContext(path=path, relpath=relpath, tree=tree,
+                         source_lines=source.splitlines())

@@ -1,0 +1,60 @@
+"""``deprecated-aggregation``: calls/imports of the legacy aggregation API.
+
+The four legacy entry points (``aggregate_stacked``, ``exact_aggregate``,
+``psum_aggregate``, ``psum_aggregate_stacked``) survive only as
+DeprecationWarning shims in ``core/ota.py`` — every in-repo aggregation
+call must go through ``ota.aggregate`` / ``ota.aggregate_apply``.
+
+This rule absorbs the grep-based ``tools/lint_aggregation_api.py`` (which
+now execs this rule as a thin shim): it flags call syntax on a legacy name
+(bare or attribute) and ``from repro.core.ota import <legacy>`` imports,
+anywhere outside ``core/ota.py`` itself.  Being AST-based, prose mentions
+in strings/comments can no longer false-positive, and ``# repro:
+noqa[deprecated-aggregation]`` marks sanctioned exceptions in-diff.
+``tests/`` is outside the default scan roots on purpose: the suite keeps
+legacy-name coverage so the deprecated wrappers stay correct until removal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analyze.astutils import ModuleContext, dotted_name
+from repro.analyze.findings import Finding
+from repro.analyze.rules import Rule, register_rule
+
+DEPRECATED = frozenset({
+    "aggregate_stacked",
+    "exact_aggregate",
+    "psum_aggregate",
+    "psum_aggregate_stacked",
+})
+
+
+@register_rule
+class DeprecatedAggregationRule(Rule):
+    id = "deprecated-aggregation"
+    severity = "error"
+    description = ("caller of a deprecated aggregation wrapper; use "
+                   "ota.aggregate / ota.aggregate_apply")
+    exclude = ("src/repro/core/ota.py",)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func).rpartition(".")[2]
+                if name in DEPRECATED:
+                    yield ctx.finding(
+                        self, node,
+                        f"call to deprecated ota.{name}; use ota.aggregate"
+                        " / ota.aggregate_apply",
+                    )
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and node.module.endswith("ota"):
+                    for alias in node.names:
+                        if alias.name in DEPRECATED:
+                            yield ctx.finding(
+                                self, node,
+                                f"import of deprecated ota.{alias.name}; "
+                                "use ota.aggregate / ota.aggregate_apply",
+                            )

@@ -1,0 +1,183 @@
+"""Python-level in-jit hazards: the rules over ``ctx.traced_functions``.
+
+Four rules share the heuristic traced-function analysis from
+:mod:`repro.analyze.astutils` (functions decorated with ``jit``-likes,
+passed to tracing entry points, or nested inside either):
+
+``np-under-trace``
+    A ``np.*`` / ``numpy.*`` call inside a traced function whose arguments
+    touch traced data (a parameter of the traced function, or a ``jnp.*``
+    expression).  numpy executes at trace time: on a tracer it raises, and
+    on a value that *happens* to be concrete it silently constant-folds —
+    a sweep-lane program that numpy-folds a packed parameter runs every
+    lane at the prototype's value.  Static python-scalar numpy math
+    (``np.sqrt(2.0)``, ``np.float32`` dtype mentions) is deliberately not
+    flagged.
+
+``tracer-leak``
+    ``float()`` / ``int()`` / ``bool()`` on traced data inside a traced
+    function — forces a concretization error (or, under AOT tracing, a
+    baked-in constant).
+
+``traced-branch``
+    ``if`` / ``while`` / ``assert`` predicated on a ``jnp.*`` expression
+    inside a traced function — Python control flow cannot branch on a
+    tracer; use ``lax.cond`` / ``jnp.where``.
+
+``jit-in-loop``
+    ``jax.jit(...)`` constructed inside a ``for`` / ``while`` body (or a
+    comprehension).  ``jit`` caches per function object, so a fresh
+    closure each iteration recompiles each iteration — the exact
+    recompile-per-call bug PR 2 fixed in ``run_jit`` / ``monte_carlo``.
+    Benchmarks that *intend* one compile per structural size carry a
+    ``# repro: noqa[jit-in-loop]`` so the exception is visible in-diff.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analyze.astutils import (
+    FuncNode, ModuleContext, dotted_name, matches,
+)
+from repro.analyze.findings import Finding
+from repro.analyze.rules import Rule, register_rule
+
+_NP_ROOTS = ("np", "numpy", "onp")
+
+# np attributes that are safe at trace time: dtype constructors on static
+# values are idiomatic, and np.dtype/np.ndarray appear in isinstance checks
+_NP_STATIC_OK = frozenset({
+    "dtype", "ndarray", "generic", "isscalar", "ndim", "shape",
+})
+
+_JNP_PREFIXES = ("jnp.", "jax.numpy.", "jax.nn.", "jax.lax.", "lax.")
+
+
+def _is_np_call(call: ast.Call) -> Optional[str]:
+    dotted = dotted_name(call.func)
+    root, _, rest = dotted.partition(".")
+    if root in _NP_ROOTS and rest and rest not in _NP_STATIC_OK:
+        return dotted
+    return None
+
+
+def _contains_jnp(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            dotted = dotted_name(sub.func)
+            if any(dotted.startswith(p) for p in _JNP_PREFIXES):
+                return True
+    return False
+
+
+def _touches_traced(ctx: ModuleContext, anchor: ast.AST,
+                    expr: ast.AST) -> bool:
+    """Whether ``expr`` plausibly evaluates traced data: it mentions a
+    parameter of an enclosing traced function, or contains a jnp call."""
+    if _contains_jnp(expr):
+        return True
+    params = ctx.traced_param_names(anchor)
+    return any(isinstance(n, ast.Name) and n.id in params
+               for n in ast.walk(expr))
+
+
+@register_rule
+class NpUnderTraceRule(Rule):
+    id = "np-under-trace"
+    severity = "error"
+    description = ("numpy call on traced data inside a jitted/scanned/"
+                   "vmapped function")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _is_np_call(node)
+            if name is None or not ctx.in_traced_function(node):
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            if any(_touches_traced(ctx, node, a) for a in args):
+                yield ctx.finding(
+                    self, node,
+                    f"{name}(...) runs at trace time on traced data; "
+                    "use jnp (or hoist the static math out of the traced "
+                    "function)")
+
+
+@register_rule
+class TracerLeakRule(Rule):
+    id = "tracer-leak"
+    severity = "error"
+    description = "float()/int()/bool() on traced data inside a traced function"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and len(node.args) == 1):
+                continue
+            if not ctx.in_traced_function(node):
+                continue
+            if _touches_traced(ctx, node, node.args[0]):
+                yield ctx.finding(
+                    self, node,
+                    f"{node.func.id}() concretizes a tracer inside a "
+                    "traced function; keep it an array (or compute the "
+                    "scalar outside the trace)")
+
+
+@register_rule
+class TracedBranchRule(Rule):
+    id = "traced-branch"
+    severity = "error"
+    description = "Python if/while/assert on a jnp expression under trace"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            else:
+                continue
+            if not ctx.in_traced_function(node):
+                continue
+            if _contains_jnp(test):
+                kind = type(node).__name__.lower()
+                yield ctx.finding(
+                    self, node,
+                    f"python {kind} on a jnp expression under trace "
+                    "(TracerBoolConversionError); use lax.cond / "
+                    "lax.select / jnp.where")
+
+
+@register_rule
+class JitInLoopRule(Rule):
+    id = "jit-in-loop"
+    severity = "warning"
+    description = "jax.jit constructed inside a loop (recompiles per iteration)"
+
+    _LOOPS = (ast.For, ast.AsyncFor, ast.While,
+              ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and matches(dotted_name(node.func),
+                                frozenset({"jax.jit", "jit"}))):
+                continue
+            for anc in ctx.ancestors(node):
+                if isinstance(anc, FuncNode):
+                    break  # a def inside the loop is a fresh scope per
+                           # call anyway; only flag jits directly in a loop
+                if isinstance(anc, self._LOOPS):
+                    yield ctx.finding(
+                        self, node,
+                        "jax.jit(...) inside a loop compiles a fresh "
+                        "program per iteration; hoist it (or cache like "
+                        "fedpg._compiled_run)")
+                    break

@@ -1,0 +1,69 @@
+"""``xla-flags``: ad-hoc ``XLA_FLAGS`` environment surgery.
+
+``repro.utils.platform`` owns process-level XLA configuration
+(``set_host_device_count`` merges flags instead of clobbering them, and
+``REPRO_EMULATED_DEVICES`` replaces per-job flag strings).  Writing
+``os.environ["XLA_FLAGS"]`` anywhere else silently discards whatever flags
+the caller already set — the exact copy-paste drift PR 5 removed — so the
+rule flags every direct mutation outside the owning module:
+
+* ``os.environ["XLA_FLAGS"] = ...`` (and ``+=``)
+* ``os.environ.setdefault("XLA_FLAGS", ...)``
+* ``os.environ.update({... "XLA_FLAGS" ...})``
+* ``os.putenv("XLA_FLAGS", ...)``
+
+Reads (``os.environ.get("XLA_FLAGS")``) are fine — diagnostics report the
+effective flags.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analyze.astutils import ModuleContext, dotted_name
+from repro.analyze.findings import Finding
+from repro.analyze.rules import Rule, register_rule
+
+_VAR = "XLA_FLAGS"
+_FIX = ("route XLA flag changes through repro.utils.platform "
+        "(set_host_device_count / REPRO_EMULATED_DEVICES)")
+
+
+def _is_environ_sub(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Subscript)
+            and dotted_name(node.value).endswith("environ")
+            and isinstance(node.slice, ast.Constant)
+            and node.slice.value == _VAR)
+
+
+def _mentions_var(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Constant) and n.value == _VAR
+               for n in ast.walk(node))
+
+
+@register_rule
+class XlaFlagsRule(Rule):
+    id = "xla-flags"
+    severity = "error"
+    description = "direct XLA_FLAGS mutation bypassing repro.utils.platform"
+    exclude = ("src/repro/utils/platform.py",)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                if any(_is_environ_sub(t) for t in targets):
+                    yield ctx.finding(
+                        self, node,
+                        f"direct os.environ[{_VAR!r}] write; {_FIX}")
+            elif isinstance(node, ast.Call):
+                dotted = dotted_name(node.func)
+                if (dotted.endswith("environ.setdefault")
+                        or dotted.endswith("environ.update")
+                        or dotted.endswith("putenv")):
+                    if _mentions_var(node):
+                        yield ctx.finding(
+                            self, node,
+                            f"{dotted.rpartition('.')[2]}() mutation of "
+                            f"{_VAR}; {_FIX}")

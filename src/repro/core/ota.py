@@ -303,6 +303,32 @@ def aggregate_apply(
                                    gains=gains)
 
 
+def uplink_jaxpr(cfg: Optional[OTAConfig], *, n_agents: int = 4,
+                 dim: int = 8, apply: bool = False, alpha: Scalar = 1e-3,
+                 backend: str = "xla"):
+    """Trace the stacked uplink for structural inspection.
+
+    Returns the ClosedJaxpr of ``aggregate`` (or ``aggregate_apply`` with
+    ``apply=True``) on a ``(n_agents, dim)`` gradient stack — no execution,
+    no compile.  This is the hook ``repro.analyze.contracts``'s wire-dtype
+    checker walks: the uplink may narrow floats *only* through the
+    sanctioned ``OTAConfig.wire_dtype`` bf16 hop, so any other
+    ``convert_element_type`` to a smaller float in this jaxpr is a
+    precision bug.
+    """
+    grads = jnp.zeros((n_agents, dim), jnp.float32)
+    key = jax.random.key(0)
+    if apply:
+        params = jnp.zeros((dim,), jnp.float32)
+        return jax.make_jaxpr(
+            lambda g, p, k: aggregate_apply(g, cfg, p, key=k, alpha=alpha,
+                                            backend=backend)
+        )(grads, params, key)
+    return jax.make_jaxpr(
+        lambda g, k: aggregate(g, cfg, key=k, backend=backend)
+    )(grads, key)
+
+
 # ---------------------------------------------------------------------------
 # Form 1 impl: stacked per-agent gradients (literal Algorithm 2).
 # ---------------------------------------------------------------------------

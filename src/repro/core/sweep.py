@@ -446,6 +446,26 @@ def _make_lane(env, policy, part: Partition):
     return lane
 
 
+def lane_program(env, policy, part: Partition, mc_runs: int = 2):
+    """The partition's program, exposed for structural inspection.
+
+    Returns ``(packed, fn, keys)`` where ``fn(packed, keys)`` is exactly the
+    callable ``sweep()`` would jit for this partition in ``mode="vmap"``
+    (vmapped over lanes when anything varies, the single replicate lane
+    otherwise) and ``keys`` is a ``split``-shaped example argument.  This is
+    the hook ``repro.analyze.contracts.check_lane_contract`` traces: the
+    bitwise-lane exactness contract says ``packed`` holds *only* the axes
+    that vary inside the partition — every packed leaf must differ across
+    lanes and must survive as a consumed dynamic input of the traced
+    program, while constant axes stay closed-over Python literals.
+    """
+    packed = _pack_partition(part)
+    lane = _make_lane(env, policy, part)
+    keys = jax.random.split(jax.random.key(0), mc_runs)
+    fn = jax.vmap(lane, in_axes=(0, None)) if packed else lane
+    return packed, fn, keys
+
+
 # ---------------------------------------------------------------------------
 # Results.
 # ---------------------------------------------------------------------------
@@ -636,15 +656,19 @@ def sweep(
                 lane, packed, keys, mesh)
             pending.append((part, t0, stacked, placement))
             continue
+        # One jit per loop iteration is the design here, not the recompile
+        # bug repro.analyze's jit-in-loop rule hunts: each partition is a
+        # structurally distinct program and compiles exactly once.
         if not packed:
             # Every scenario in the partition is identical: run one lane and
             # replicate its history.
-            stacked, lanes = jax.jit(lane)({}, keys), False
+            stacked, lanes = jax.jit(lane)({}, keys), False  # repro: noqa[jit-in-loop]
         elif mode == "vmap":
-            stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(packed, keys)
+            stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(  # repro: noqa[jit-in-loop]
+                packed, keys)
             lanes = True
         else:
-            stacked = jax.jit(
+            stacked = jax.jit(  # repro: noqa[jit-in-loop]
                 lambda pk, ks: jax.lax.map(lambda p: lane(p, ks), pk)
             )(packed, keys)
             lanes = True

@@ -26,6 +26,7 @@ from repro.rl.envs.particle import (  # noqa: F401
 )
 from repro.rl.envs.registry import (  # noqa: F401
     batched_env_arrays, build_lane_env, default_policy, env_kind,
-    is_float_field, make_env, register_env, robust_eq, values_vary,
+    is_float_field, make_env, register_env, registered_envs, robust_eq,
+    values_vary,
 )
 from repro.rl.envs.tabular import garnet  # noqa: F401

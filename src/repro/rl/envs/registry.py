@@ -61,6 +61,14 @@ def register_env(
         _BUILDERS[name] = builder
 
 
+def registered_envs() -> Dict[str, type]:
+    """Snapshot of the registry: family name -> class.  The contract
+    checker (``repro.analyze.contracts.check_lane_contract``) iterates this
+    so every registered family — including ones added after this module
+    shipped — gets its pack-only-varying invariant verified."""
+    return dict(_REGISTRY)
+
+
 def env_kind(env: Any) -> str:
     """Reverse registry lookup: LandmarkNav() -> 'landmark'.
 

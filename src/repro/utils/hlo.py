@@ -51,6 +51,15 @@ _OP_LINE_RE = re.compile(
     r"(" + "|".join(_COLLECTIVE_OPS) + r")(-start|-done)?\("
 )
 
+# Fallback for result regions the strict regex cannot span: nested tuples
+# (multi-operand async pairs print "((f32[..], ...), (f32[..], ...))", whose
+# inner parens break the flat "\([^)]*\)" alternative).  Lazy-captures
+# everything between "=" and the first collective token; only consulted when
+# the strict form fails, so well-formed lines keep the precise parse.
+_OP_FALLBACK_RE = re.compile(
+    r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVE_OPS) + r")(-start|-done)?\("
+)
+
 # replica_groups=[16,16]<=[256]  (16 groups of 16)  |  iota forms with dims
 _GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 # replica_groups={{0,1,2,...},{...}}
@@ -70,6 +79,54 @@ def shape_bytes(dtype: str, dims: str) -> int:
 
 def _result_bytes(result_region: str) -> int:
     return sum(shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_region))
+
+
+def _tuple_members(region: str) -> list:
+    """Top-level members of a tuple result region, nesting-aware:
+    ``"(f32[8], (f32[64], f32[64]))"`` -> ``["f32[8]", "(f32[64], f32[64])"]``.
+    A non-tuple region is its own single member."""
+    inner = region.strip()
+    if inner.startswith("("):
+        depth = 0
+        for i, ch in enumerate(inner):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    inner = inner[1:i]
+                    break
+    members, depth, start = [], 0, 0
+    for i, ch in enumerate(inner):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            members.append(inner[start:i])
+            start = i + 1
+    members.append(inner[start:])
+    return [m.strip() for m in members if m.strip()]
+
+
+def _start_result_bytes(kind: str, region: str, g: Optional[int]) -> int:
+    """Result bytes of an async ``-start`` op, whose result tuple carries
+    the operand(s) alongside the result(s).
+
+    Per kind: ``all-gather-start``'s result is the g-times-larger member
+    (take the max), ``reduce-scatter-start``'s is the operand scattered
+    g ways (max member / g — tuples also carry small context members, so
+    min-member is not reliable), and for the size-preserving kinds
+    (all-reduce, all-to-all, collective-permute) operand and result halves
+    are equal, so half the total is exact."""
+    sizes = [_result_bytes(m) for m in _tuple_members(region)]
+    if len(sizes) <= 1:
+        return sizes[0] if sizes else 0
+    if kind == "all-gather":
+        return max(sizes)
+    if kind == "reduce-scatter":
+        return max(sizes) // (g if g and g > 1 else 2)
+    return sum(sizes) // 2
 
 
 def _group_size(line: str) -> Optional[int]:
@@ -120,21 +177,26 @@ class CollectiveStats:
 def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
     """Estimate per-device wire bytes of every collective in an HLO dump.
 
-    ``-done`` halves of async collectives are skipped; for ``-start`` forms
-    the result tuple contains (operand, result) so its byte count is halved.
+    ``-done`` halves of async collectives are skipped; ``-start`` result
+    tuples carry operands alongside results and are unpacked per op kind
+    (see :func:`_start_result_bytes`).  Result regions the strict line
+    grammar cannot span (nested tuples) fall back to a lazy capture so the
+    op is estimated rather than silently dropped.
     """
     stats = CollectiveStats()
     for line in hlo_text.splitlines():
-        m = _OP_LINE_RE.search(line)
+        m = _OP_LINE_RE.search(line) or _OP_FALLBACK_RE.search(line)
         if m is None:
             continue
         kind, variant = m.group(2), m.group(3)
         if variant == "-done":
             continue
-        result = _result_bytes(m.group(1))
+        g = _group_size(line)
         if variant == "-start":
-            result //= 2
-        nbytes = _wire_bytes(kind, result, _group_size(line))
+            result = _start_result_bytes(kind, m.group(1), g)
+        else:
+            result = _result_bytes(m.group(1))
+        nbytes = _wire_bytes(kind, result, g)
         stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
         stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
     return stats

@@ -33,76 +33,15 @@ def pytest_addoption(parser):
 # ---------------------------------------------------------------------------
 # XLA compilation counting (used by the sweep-engine tests to prove the
 # batched path compiles strictly fewer programs than the per-scenario loop).
-# The listener must be registered once per process; jax.monitoring offers no
-# unregister, so the fixture toggles an "active" flag instead.
+# The machinery lives in repro.analyze.budget so the static-analysis
+# contract checker can machine-enforce the same budgets in CI; the fixture
+# below is a thin re-export keeping the historical test API.
 # ---------------------------------------------------------------------------
 
-_COMPILE_COUNTER = {"active": False, "count": 0}
-
-
-def _on_event_duration(event: str, *args, **kwargs) -> None:
-    if _COMPILE_COUNTER["active"] and event == "/jax/core/compile/backend_compile_duration":
-        _COMPILE_COUNTER["count"] += 1
-
-
-jax.monitoring.register_event_duration_secs_listener(_on_event_duration)
-
-
-class CompileCounter:
-    """Context manager counting XLA backend compilations while active."""
-
-    def __init__(self):
-        self.count = 0
-
-    def __enter__(self):
-        _COMPILE_COUNTER["count"] = 0
-        _COMPILE_COUNTER["active"] = True
-        return self
-
-    def __exit__(self, *exc):
-        _COMPILE_COUNTER["active"] = False
-        self.count = _COMPILE_COUNTER["count"]
-        return False
-
-
-_EAGER_HELPERS_WARMED = False
-
-
-def warm_eager_helpers() -> None:
-    """Compile JAX's eager scaffolding ONCE per process so compile counters
-    compare partition programs, not cold-start helpers.
-
-    A sweep's first run also compiles tiny eager dispatches — key splitting,
-    float32 packing converts, effective-moment math, ``l_bar_for``, the env
-    registry packer, History unstacking slices.  Tests used to hand-warm
-    these (each with its own ad-hoc prologue); the ``compile_counter``
-    fixture now runs this helper instead, with shapes deliberately distinct
-    from any real test so no *partition* program is pre-compiled on the
-    tests' behalf.
-    """
-    global _EAGER_HELPERS_WARMED
-    if _EAGER_HELPERS_WARMED:
-        return
-    from repro.core import fedpg
-    from repro.core.channel import RayleighChannel
-    from repro.core.power_control import TruncatedInversion, make_controlled_channel
-    from repro.core.sweep import grid, sweep
-    from repro.rl.envs import WindyLandmarkNav
-
-    tiny = dict(n_agents=2, batch_m=1, horizon=3, n_rounds=2, debias=True)
-    chan = make_controlled_channel(RayleighChannel(), TruncatedInversion())
-    scens = grid(env=[WindyLandmarkNav(wind=w) for w in (0.0, 0.31, 0.62)],
-                 channel=[chan], noise_sigma=1e-3, **tiny)
-    key = jax.random.key(99)
-    # mc_runs=2 matches the sweep tests' Monte-Carlo width, so the tiny
-    # split/convert programs they dispatch are all compiled here
-    sweep(None, None, scens, key, 2)
-    for s in scens[:1]:
-        from repro.core.sweep import resolve_env_policy
-        fedpg.monte_carlo(*resolve_env_policy(s), s.fedpg_config(), key, 2,
-                          ota=s.ota_config())
-    fedpg.clear_compilation_cache()
-    _EAGER_HELPERS_WARMED = True
+from repro.analyze.budget import (  # noqa: E402
+    CompileCounter,
+    warm_eager_helpers,
+)
 
 
 @pytest.fixture

@@ -1,0 +1,152 @@
+"""Unit tests for the HLO collective parser (`repro.utils.hlo`).
+
+Each collective kind's wire-byte estimate is pinned against the ring-
+algorithm formulas the module documents, on synthetic single-line HLO —
+including the tuple-shaped results of multi-operand collectives and the
+per-kind unpacking of async ``-start`` result tuples.
+"""
+import pytest
+
+from repro.utils import hlo
+
+
+def _one(line: str):
+    stats = hlo.parse_collective_bytes(line)
+    assert stats.total_count == 1, line
+    [(kind, nbytes)] = stats.bytes_by_kind.items()
+    return kind, nbytes
+
+
+# ---------------------------------------------------------------------------
+# per-op-kind estimates (result R, group size g)
+# ---------------------------------------------------------------------------
+
+def test_all_reduce_estimate():
+    # R = 256 * 4 = 1024, g = 4: wire = 2R(g-1)/g = 1536
+    kind, b = _one("%ar = f32[256]{0} all-reduce(f32[256]{0} %x), "
+                   "replica_groups={{0,1,2,3}}, to_apply=%add")
+    assert (kind, b) == ("all-reduce", 1536.0)
+
+
+def test_all_gather_estimate():
+    # R = 32 * 4 = 128, g = 4 (iota form [2,4]): wire = R(g-1)/g = 96
+    kind, b = _one("%ag = f32[32]{0} all-gather(f32[8]{0} %x), "
+                   "replica_groups=[2,4]<=[8], dimensions={0}")
+    assert (kind, b) == ("all-gather", 96.0)
+
+
+def test_reduce_scatter_estimate():
+    # R = 8 * 4 = 32 (the scattered piece), g = 4: wire = R(g-1) = 96
+    kind, b = _one("%rs = f32[8]{0} reduce-scatter(f32[32]{0} %x), "
+                   "replica_groups={{0,1,2,3}}, to_apply=%add")
+    assert (kind, b) == ("reduce-scatter", 96.0)
+
+
+def test_all_to_all_estimate():
+    # R = 64 * 4 = 256, g = 8: wire = R(g-1)/g = 224
+    kind, b = _one("%a2a = f32[64]{0} all-to-all(f32[64]{0} %x), "
+                   "replica_groups=[1,8]<=[8], dimensions={0}")
+    assert (kind, b) == ("all-to-all", 224.0)
+
+
+def test_collective_permute_estimate():
+    # wire = R exactly, group size irrelevant
+    kind, b = _one("%cp = f32[16]{0} collective-permute(f32[16]{0} %x), "
+                   "source_target_pairs={{0,1},{1,0}}")
+    assert (kind, b) == ("collective-permute", 64.0)
+
+
+def test_unparsable_groups_default_g2():
+    # no replica_groups: conservative g=2; all-reduce wire = 2R/2 = R
+    kind, b = _one("%ar = f32[10]{0} all-reduce(f32[10]{0} %x), to_apply=%add")
+    assert (kind, b) == ("all-reduce", 40.0)
+
+
+def test_bf16_shape_bytes():
+    assert hlo.shape_bytes("bf16", "256,4") == 2048
+    assert hlo.shape_bytes("f32", "") == 4        # scalar f32[]
+    assert hlo.shape_bytes("token", "") == 0      # opaque carries nothing
+
+
+# ---------------------------------------------------------------------------
+# tuple-shaped results
+# ---------------------------------------------------------------------------
+
+def test_tuple_result_multi_operand_all_reduce():
+    # fused variadic all-reduce: result = sum of members = 2 * 16 bytes
+    kind, b = _one("%ar = (f32[4]{0}, f32[4]{0}) all-reduce("
+                   "f32[4]{0} %a, f32[4]{0} %b), replica_groups={{0,1}}, "
+                   "to_apply=%add")
+    assert (kind, b) == ("all-reduce", 32.0)  # 2 * 32 * (2-1)/2
+
+
+def test_all_gather_start_takes_result_member():
+    # (operand f32[8], result f32[32]): result member is the max, not half
+    kind, b = _one("%ags = (f32[8]{0}, f32[32]{0}) all-gather-start("
+                   "f32[8]{0} %x), replica_groups=[2,4]<=[8], dimensions={0}")
+    assert (kind, b) == ("all-gather", 96.0)  # same as the sync form
+
+
+def test_reduce_scatter_start_takes_scattered_member():
+    # (operand f32[32], result f32[8], ctx u32[]): scattered piece is the
+    # operand (max member) / g — ctx scalars must not skew the estimate
+    kind, b = _one("%rss = (f32[32]{0}, f32[8]{0}, u32[], u32[]) "
+                   "reduce-scatter-start(f32[32]{0} %x), "
+                   "replica_groups={{0,1,2,3}}, to_apply=%add")
+    assert (kind, b) == ("reduce-scatter", 96.0)
+
+
+def test_all_reduce_start_halves_pair():
+    kind, b = _one("%ars = (f32[256]{0}, f32[256]{0}) all-reduce-start("
+                   "f32[256]{0} %x), replica_groups={{0,1,2,3}}, "
+                   "to_apply=%add")
+    assert (kind, b) == ("all-reduce", 1536.0)  # same as the sync form
+
+
+def test_done_half_is_skipped():
+    text = ("%ars = (f32[8]{0}, f32[8]{0}) all-reduce-start(f32[8]{0} %x), "
+            "replica_groups={{0,1}}, to_apply=%add\n"
+            "%ard = f32[8]{0} all-reduce-done((f32[8]{0}, f32[8]{0}) %ars)\n")
+    stats = hlo.parse_collective_bytes(text)
+    assert stats.total_count == 1
+    assert stats.bytes_by_kind["all-reduce"] == 32.0
+
+
+def test_nested_tuple_fallback_not_dropped():
+    # multi-operand async pair: "((ops), (results))" breaks the flat
+    # result-region grammar; the lazy fallback must still count the op,
+    # taking the larger (result) group
+    kind, b = _one("%ags = ((f32[8]{0}, f32[8]{0}), (f32[32]{0}, f32[32]{0}))"
+                   " all-gather-start(f32[8]{0} %a, f32[8]{0} %b), "
+                   "replica_groups=[2,4]<=[8], dimensions={0}")
+    assert kind == "all-gather"
+    assert b == pytest.approx(256 * 3 / 4)
+
+
+def test_tuple_members_nesting():
+    assert hlo._tuple_members("(f32[8], (f32[64], f32[64]))") == [
+        "f32[8]", "(f32[64], f32[64])"]
+    assert hlo._tuple_members("f32[8]{0}") == ["f32[8]{0}"]
+    # commas inside shape dims don't split members
+    assert hlo._tuple_members("(f32[8,4]{1,0}, f32[2,2]{1,0})") == [
+        "f32[8,4]{1,0}", "f32[2,2]{1,0}"]
+
+
+def test_count_op():
+    text = ("%f = f32[8]{0} fusion(f32[8]{0} %x), kind=kLoop\n"
+            "%g = f32[8]{0} fusion(f32[8]{0} %f), kind=kLoop\n"
+            "%d = f32[8,8]{1,0} dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)\n")
+    assert hlo.count_op(text, "fusion") == 2
+    assert hlo.count_op(text, "dot") == 1
+    assert hlo.count_op(text, "all-reduce") == 0
+
+
+def test_summary_and_totals():
+    text = ("%ar = f32[10]{0} all-reduce(f32[10]{0} %x), to_apply=%add\n"
+            "%cp = f32[4]{0} collective-permute(f32[4]{0} %y), "
+            "source_target_pairs={{0,1}}\n")
+    stats = hlo.parse_collective_bytes(text)
+    assert stats.total_count == 2
+    assert stats.total_bytes == 40.0 + 16.0
+    assert "all-reduce" in stats.summary()
+    assert hlo.parse_collective_bytes("").summary() == "no collectives"

@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Convenience shim: ``python tools/analyze.py`` == ``python -m repro.analyze``.
+
+Adds ``src/`` to ``sys.path`` so the analyzer runs from a bare checkout
+without an editable install; every CLI flag passes through unchanged.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analyze.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

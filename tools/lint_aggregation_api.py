@@ -1,74 +1,35 @@
 #!/usr/bin/env python
-"""CI lint: forbid new in-repo calls to the deprecated aggregation wrappers.
+"""DEPRECATED shim: the aggregation-API lint now lives in ``repro.analyze``.
 
-The four legacy entry points (``aggregate_stacked``, ``exact_aggregate``,
-``psum_aggregate``, ``psum_aggregate_stacked``) survive only as
-DeprecationWarning shims in ``core/ota.py`` — every in-repo aggregation call
-must go through ``ota.aggregate`` / ``ota.aggregate_apply``.  This script
-greps ``src/``, ``benchmarks/`` and ``examples/`` for call syntax on the
-legacy names and fails if any appear outside ``core/ota.py`` itself.
+The original grep-based checker was absorbed into the AST rule
+``deprecated-aggregation`` (``repro.analyze.rules.deprecated_api``), which
+this script simply runs — same scan roots (``src/``, ``benchmarks/``,
+``examples/``; ``tests/`` deliberately unlinted), same exit-code contract
+(0 clean, 1 violations) — so existing CI invocations and habits keep
+working.  Prefer the full analyzer::
 
-``tests/`` is deliberately NOT linted: the test suite keeps legacy-name
-coverage so the deprecated wrappers stay correct until they are removed.
-
-Usage: python tools/lint_aggregation_api.py  (exit 0 clean, 1 violations)
+    python -m repro.analyze --strict                          # everything
+    python -m repro.analyze --ast-only --rules deprecated-aggregation
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-DEPRECATED = (
-    "aggregate_stacked",
-    "exact_aggregate",
-    "psum_aggregate",
-    "psum_aggregate_stacked",
-)
-
-LINT_DIRS = ("src", "benchmarks", "examples")
-ALLOWED = {REPO / "src" / "repro" / "core" / "ota.py"}
-
-# a call or an import of the bare name (doc mentions in strings/comments are
-# filtered by stripping comment tails and skipping pure-prose lines)
-CALL_RE = re.compile(
-    r"(?<![\w.])(" + "|".join(DEPRECATED) + r")\s*\("
-)
-IMPORT_RE = re.compile(
-    r"^\s*from\s+repro\.core\.ota\s+import\s+.*\b("
-    + "|".join(DEPRECATED) + r")\b"
-)
-
-
-def lint_file(path: pathlib.Path) -> list[tuple[int, str]]:
-    hits = []
-    for lineno, line in enumerate(
-            path.read_text(encoding="utf-8").splitlines(), 1):
-        code = line.split("#", 1)[0]
-        if CALL_RE.search(code) or IMPORT_RE.search(code):
-            hits.append((lineno, line.strip()))
-    return hits
+from repro.analyze import get_rules, repo_root, scan  # noqa: E402
 
 
 def main() -> int:
-    violations = []
-    for d in LINT_DIRS:
-        for path in sorted((REPO / d).rglob("*.py")):
-            if path in ALLOWED:
-                continue
-            for lineno, line in lint_file(path):
-                violations.append((path.relative_to(REPO), lineno, line))
-    if violations:
+    report = scan(repo_root(), rules=get_rules(["deprecated-aggregation"]))
+    if report.findings:
         print("deprecated aggregation API calls found "
               "(use ota.aggregate / ota.aggregate_apply):")
-        for path, lineno, line in violations:
-            print(f"  {path}:{lineno}: {line}")
-        return 1
-    print("aggregation API lint clean "
-          f"({', '.join(d + '/' for d in LINT_DIRS)})")
-    return 0
+        print(report.render_text())
+    else:
+        print("aggregation API lint clean (src/, benchmarks/, examples/)")
+    return report.exit_code(strict=True)
 
 
 if __name__ == "__main__":
