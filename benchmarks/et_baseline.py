@@ -6,8 +6,6 @@ uploads still need one orthogonal channel use per *uploading agent*; OTA
 needs exactly 1 per round regardless of N — the paper's scaling argument."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -18,6 +16,8 @@ from repro.core.event_triggered import ETConfig, run_jit as et_run
 from repro.core.ota import OTAConfig
 from repro.rl.env import LandmarkNav
 from repro.rl.policy import MLPPolicy
+
+from repro.telemetry import trace as rtrace
 
 from benchmarks.common import emit
 
@@ -30,18 +30,21 @@ def run(n_rounds: int = 200, n_agents: int = 20, batch_m: int = 5,
     ota = OTAConfig(channel=make_channel("rayleigh"),
                     noise_sigma=RAYLEIGH.noise_sigma, debias=True)
 
-    t0 = time.perf_counter()
-    _, h_ota = fedpg.run_jit(env, pol, cfg, jax.random.key(0), ota=ota)
-    dt_ota = (time.perf_counter() - t0) * 1e6
+    # spans time dispatch (not materialisation) — same semantics as the
+    # raw-clock version this replaced
+    with rtrace.span("et_vs_ota:ota") as sp:
+        _, h_ota = fedpg.run_jit(env, pol, cfg, jax.random.key(0), ota=ota)
+    dt_ota = sp.duration_us
 
     results = {"ota": (float(jnp.mean(h_ota.rewards[-20:])), 1.0)}
     emit("et_vs_ota_ota", dt_ota,
          f"final_reward={results['ota'][0]:.3f};channel_uses_per_round=1.0")
 
     for tau in (0.01, 0.1):
-        t0 = time.perf_counter()
-        _, h_et = et_run(env, pol, cfg, ETConfig(tau=tau), jax.random.key(0))
-        dt = (time.perf_counter() - t0) * 1e6
+        with rtrace.span(f"et_vs_ota:et_tau{tau:g}") as sp:
+            _, h_et = et_run(env, pol, cfg, ETConfig(tau=tau),
+                             jax.random.key(0))
+        dt = sp.duration_us
         rew = float(jnp.mean(h_et.rewards[-20:]))
         uses = float(jnp.mean(h_et.uploads))
         results[f"et_{tau}"] = (rew, uses)

@@ -2,10 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
 writes them as a JSON list (the CI bench-smoke artifact, so the perf
-trajectory is recorded per run).
+trajectory is recorded per run).  Every row now carries the compile/run
+split from ``repro.telemetry.trace.timed_call``; ``--trace PATH`` exports
+the span tree as Chrome trace JSON (load in Perfetto) and ``--ledger
+PATH`` streams rows/platform/compile-counts as a JSONL run ledger
+(render with ``python -m repro.telemetry.report``).
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig12,...]
                                             [--json BENCH_smoke.json]
+                                            [--trace TRACE_bench.json]
+                                            [--ledger LEDGER.jsonl]
 """
 from __future__ import annotations
 
@@ -20,6 +26,8 @@ from benchmarks import (  # noqa: E402
     roofline_table, theory_table,
 )
 from benchmarks.common import ROWS, emit
+from repro.telemetry import Ledger, set_ledger
+from repro.telemetry import trace as rtrace
 
 SUITES = {
     "fig12": lambda quick: fig12_rayleigh.run(
@@ -53,25 +61,46 @@ def main() -> int:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--json", default="",
                     help="also write the result rows as JSON to this path")
+    ap.add_argument("--trace", default="",
+                    help="export the span tree as Chrome trace JSON here")
+    ap.add_argument("--ledger", default="",
+                    help="stream a JSONL run ledger to this path")
     args = ap.parse_args()
+
+    ledger = None
+    if args.ledger:
+        ledger = Ledger(args.ledger)
+        ledger.log_platform()
+        set_ledger(ledger)
 
     names = [n for n in args.only.split(",") if n] or list(SUITES)
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []
-    for name in names:
-        try:
-            SUITES[name](args.quick)
-        except Exception as e:  # keep the harness running
-            failures.append(name)
-            emit(f"{name}_FAILED", 0.0, f"error={type(e).__name__}:{e}")
-    emit("total_wall", (time.time() - t0) * 1e6, f"suites={len(names)}")
+    try:
+        for name in names:
+            with rtrace.span(f"suite:{name}"):
+                try:
+                    if ledger is not None:
+                        with ledger.count_compiles(label=name):
+                            SUITES[name](args.quick)
+                    else:
+                        SUITES[name](args.quick)
+                except Exception as e:  # keep the harness running
+                    failures.append(name)
+                    emit(f"{name}_FAILED", 0.0,
+                         f"error={type(e).__name__}:{e}")
+        emit("total_wall", (time.time() - t0) * 1e6, f"suites={len(names)}")
+    finally:
+        if args.trace:
+            rtrace.export(args.trace)
+        if ledger is not None:
+            set_ledger(None)
+            ledger.close()
     if args.json:
-        records = [{"name": name, "us_per_call": us, "derived": derived}
-                   for name, us, derived in ROWS]
         with open(args.json, "w") as f:
             json.dump({"suites": names, "failures": failures,
-                       "rows": records}, f, indent=1)
+                       "rows": ROWS}, f, indent=1)
     return 1 if failures else 0
 
 

@@ -76,3 +76,4 @@ from repro.analyze.rules import deprecated_api  # noqa: E402,F401
 from repro.analyze.rules import jit_pitfalls    # noqa: E402,F401
 from repro.analyze.rules import platform        # noqa: E402,F401
 from repro.analyze.rules import prng            # noqa: E402,F401
+from repro.analyze.rules import timing          # noqa: E402,F401

@@ -59,6 +59,10 @@ Public API:
 
 The environment zoo itself (LandmarkNav variants, CliffWalk, LQR, Garnet
 tabular MDPs, HeterogeneousEnv, register_env) lives in ``repro.rl.envs``.
+Observability — in-jit round probes (``fedpg.run(...,
+telemetry=TelemetryConfig())``), the span tracer behind sweep partition
+timing, and the run ledger — lives in ``repro.telemetry``; telemetry off
+emits programs bitwise identical to the pre-telemetry ones.
 """
 from repro.core import (  # noqa: F401
     channel, distribute, event_triggered, fedpg, gpomdp, ota, power_control,

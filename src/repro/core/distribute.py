@@ -190,7 +190,20 @@ def dispatch_partition(
     ``placement.n_lanes > 0``; the replicate path returns unstacked
     ``(mc_runs, ...)`` leaves.  Callers slice real lanes / replicate and
     defer ``block_until_ready`` until they materialise results.
+
+    Compilation is split out ahead-of-time (``lower().compile()`` — still
+    exactly one XLA compile per partition, the compile-budget contract's
+    invariant) so the ``compile`` and ``dispatch`` phases land as separate
+    ``repro.telemetry.trace`` spans in sweep trace exports.
     """
+    from repro.telemetry import trace as rtrace
+
     jitted, placed, keys_placed, placement = place_partition(
         lane_fn, packed, keys, mesh, donate=donate)
-    return jitted(placed, keys_placed), placement
+    with rtrace.span("compile", lanes=placement.n_lanes,
+                     pad=placement.n_pad, devices=mesh.size):
+        compiled = jitted.lower(placed, keys_placed).compile()
+    with rtrace.span("dispatch", lanes=placement.n_lanes,
+                     devices=mesh.size):
+        out = compiled(placed, keys_placed)
+    return out, placement

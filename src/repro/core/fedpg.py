@@ -27,6 +27,8 @@ from repro.core import ota
 from repro.core.ota import OTAConfig
 from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import empirical_reward, rollout_batch
+from repro.telemetry.probes import RoundTelemetry, TelemetryConfig
+from repro.telemetry import probes as _probes
 from repro.utils.tree import tree_global_norm_sq
 
 PyTree = Any
@@ -44,9 +46,25 @@ class FedPGConfig:
 
 
 class History(NamedTuple):
+    """Per-round training metrics; prefix-compatible with its 3-field
+    predecessor — ``telemetry`` defaults to None (an empty pytree subtree)
+    and only holds a ``RoundTelemetry`` stack when a ``TelemetryConfig``
+    with active probes was passed to the run."""
+
     rewards: jax.Array    # (K,)
     grad_sq: jax.Array    # (K,)
     gain_mean: jax.Array  # (K,) mean sampled h per round (1.0 for exact)
+    telemetry: Optional[RoundTelemetry] = None  # (K,)-leaved probes, or None
+
+
+def _active_telemetry(
+    telemetry: Optional[TelemetryConfig],
+) -> Optional[TelemetryConfig]:
+    """Normalise: a config with every probe off is telemetry-off (the
+    emitted program must be byte-identical to ``telemetry=None``)."""
+    if telemetry is not None and telemetry.active:
+        return telemetry
+    return None
 
 
 def _estimator_grad(cfg: FedPGConfig):
@@ -66,6 +84,7 @@ def make_round_fn(
     agent_mesh=None,
     agent_axis: str = "agents",
     ota_backend: str = "auto",
+    telemetry: Optional[TelemetryConfig] = None,
 ):
     """One communication round: (theta, key) -> (theta', metrics).
 
@@ -90,11 +109,19 @@ def make_round_fn(
     "pallas", or "auto" — see :class:`repro.core.ota.AggregateSpec`); on
     the pallas backend the uplink *and* the server SGD step run as one
     fused kernel pass (:func:`repro.core.ota.aggregate_apply`).
+
+    ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig` with at least
+    one probe on) appends a :class:`RoundTelemetry` pytree to the metrics
+    tuple — in-jit per-round diagnostics, see ``repro.telemetry.probes``.
+    With ``telemetry=None`` (or all probes off) the emitted program is
+    bitwise identical to the pre-telemetry round.
     """
+    telem = _active_telemetry(telemetry)
 
     if agent_mesh is not None:
         return _make_agent_sharded_round_fn(
-            env, policy, cfg, ota_cfg, agent_mesh, agent_axis, ota_backend)
+            env, policy, cfg, ota_cfg, agent_mesh, agent_axis, ota_backend,
+            telemetry=telem)
 
     grad_fn = _estimator_grad(cfg)
     hetero = isinstance(env, HeterogeneousEnv)
@@ -129,7 +156,22 @@ def make_round_fn(
         # --- metrics ------------------------------------------------------
         reward = empirical_reward(trajs, cfg.gamma)
         grad_sq = tree_global_norm_sq(mean_grad)
-        return theta_next, (reward, grad_sq, gain_mean)
+        if telem is None:
+            return theta_next, (reward, grad_sq, gain_mean)
+
+        # --- telemetry probes (in-jit, only when requested) ---------------
+        if ota_cfg is None:
+            gains = jnp.ones((cfg.n_agents,))
+            update_norm = jnp.sqrt(grad_sq)
+        else:
+            gains = h
+            update_norm = jnp.sqrt(tree_global_norm_sq(jax.tree.map(
+                jnp.subtract, theta, theta_next))) / cfg.alpha
+        probes = _probes.stacked_round_probes(
+            telem, grads_stacked=grads, gains=gains, ota_cfg=ota_cfg,
+            n_agents=cfg.n_agents, gain_mean=gain_mean,
+            update_norm=update_norm)
+        return theta_next, (reward, grad_sq, gain_mean, probes)
 
     return round_fn
 
@@ -137,6 +179,7 @@ def make_round_fn(
 def _make_agent_sharded_round_fn(
     env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
     mesh, axis_name: str, ota_backend: str = "auto",
+    telemetry: Optional[TelemetryConfig] = None,
 ):
     """The agent axis laid across ``mesh[axis_name]`` via shard_map.
 
@@ -193,17 +236,31 @@ def _make_agent_sharded_round_fn(
         r_local = -jnp.sum(discounted_return(trajs.losses, cfg.gamma))
         reward = jax.lax.psum(r_local, axis_name) / (cfg.n_agents * cfg.batch_m)
         grad_sq = tree_global_norm_sq(mean_grad)
-        return theta_next, (reward, grad_sq, gain_mean)
+        if telemetry is None:
+            return theta_next, (reward, grad_sq, gain_mean)
+
+        # telemetry probes: psum/pmax reductions, replicated outputs
+        n_local = jax.tree.leaves(grads)[0].shape[0]
+        local_gains = h if ota_cfg is not None else jnp.ones((n_local,))
+        probes = _probes.sharded_round_probes(
+            telemetry, local_grads=grads, local_gains=local_gains,
+            ota_cfg=ota_cfg, n_agents=cfg.n_agents, axis_name=axis_name,
+            gain_mean=gain_mean,
+            update_norm=jnp.sqrt(tree_global_norm_sq(update)))
+        return theta_next, (reward, grad_sq, gain_mean, probes)
 
     def round_fn(theta: PyTree, key: jax.Array):
         key_samp, key_chan = jax.random.split(key)
         agent_keys = jax.random.split(key_samp, cfg.n_agents)
         lane_stacks = dict(env.params) if hetero else {}
         stack_specs = jax.tree.map(lambda _: P(axis_name), lane_stacks)
+        metric_specs = (P(), P(), P())
+        if telemetry is not None:
+            metric_specs += (RoundTelemetry(P(), P(), P(), P(), P()),)
         return shard_map(
             local_round, mesh=mesh,
             in_specs=(P(), P(axis_name), stack_specs, P()),
-            out_specs=(P(), (P(), P(), P())),
+            out_specs=(P(), metric_specs),
             check_rep=False,
         )(theta, agent_keys, lane_stacks, key_chan)
 
@@ -221,6 +278,7 @@ def run(
     agent_mesh=None,
     agent_axis: str = "agents",
     ota_backend: str = "auto",
+    telemetry: Optional[TelemetryConfig] = None,
 ):
     """Run K rounds; returns (theta_K, History).
 
@@ -228,13 +286,14 @@ def run(
     Algorithm 2 over the configured channel.  ``agent_mesh`` shards the
     agent axis across a device mesh (see :func:`make_round_fn`) — use
     ``repro.core.distribute.agent_mesh_for`` to build one.  ``ota_backend``
-    routes the uplink ("xla" | "pallas" | "auto").
+    routes the uplink ("xla" | "pallas" | "auto").  ``telemetry`` (active
+    probes) fills ``History.telemetry`` with ``(K,)``-leaved round probes.
     """
     key_init, key_scan = jax.random.split(key)
     theta = policy.init(key_init) if theta0 is None else theta0
     round_fn = make_round_fn(env, policy, cfg, ota,
                              agent_mesh=agent_mesh, agent_axis=agent_axis,
-                             ota_backend=ota_backend)
+                             ota_backend=ota_backend, telemetry=telemetry)
 
     def body(carry, key_k):
         theta = carry
@@ -242,7 +301,12 @@ def run(
         return theta, metrics
 
     keys = jax.random.split(key_scan, cfg.n_rounds)
-    theta, (rewards, grad_sq, gain_mean) = jax.lax.scan(body, theta, keys)
+    theta, metrics = jax.lax.scan(body, theta, keys)
+    if len(metrics) == 4:
+        rewards, grad_sq, gain_mean, probes = metrics
+        return theta, History(rewards=rewards, grad_sq=grad_sq,
+                              gain_mean=gain_mean, telemetry=probes)
+    rewards, grad_sq, gain_mean = metrics
     return theta, History(rewards=rewards, grad_sq=grad_sq, gain_mean=gain_mean)
 
 
@@ -261,17 +325,19 @@ _CACHE_SIZE = 64
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
-def _compiled_run(env, policy, cfg: FedPGConfig, ota_cfg, backend: str):
+def _compiled_run(env, policy, cfg: FedPGConfig, ota_cfg, backend: str,
+                  telemetry=None):
     return jax.jit(
-        lambda k: run(env, policy, cfg, k, ota=ota_cfg, ota_backend=backend))
+        lambda k: run(env, policy, cfg, k, ota=ota_cfg, ota_backend=backend,
+                      telemetry=telemetry))
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota_cfg,
-                          n_runs: int, backend: str):
+                          n_runs: int, backend: str, telemetry=None):
     return jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota_cfg,
-                      ota_backend=backend)[1]))
+                      ota_backend=backend, telemetry=telemetry)[1]))
 
 
 # every compiled-program cache in the package; other modules (e.g.
@@ -299,19 +365,22 @@ def _hashable(*objs) -> bool:
 
 
 def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None,
-            ota_backend: str = "auto"):
+            ota_backend: str = "auto",
+            telemetry: Optional[TelemetryConfig] = None):
     """jit-compiled entry point (env/policy/cfgs are closure constants).
 
-    Repeated calls with the same ``(env, policy, cfg, ota, ota_backend)``
-    reuse the compiled program (``theta0`` is a pytree and cannot key a
-    cache, so passing one compiles fresh).  Caching needs every argument
-    hashable: envs holding jax arrays (e.g. ``TabularMDP``) take the
-    uncached path.
+    Repeated calls with the same ``(env, policy, cfg, ota, ota_backend,
+    telemetry)`` reuse the compiled program (``theta0`` is a pytree and
+    cannot key a cache, so passing one compiles fresh).  Caching needs
+    every argument hashable: envs holding jax arrays (e.g. ``TabularMDP``)
+    take the uncached path.
     """
-    if theta0 is None and _hashable(env, policy, cfg, ota):
-        return _compiled_run(env, policy, cfg, ota, ota_backend)(key)
+    telemetry = _active_telemetry(telemetry)
+    if theta0 is None and _hashable(env, policy, cfg, ota, telemetry):
+        return _compiled_run(env, policy, cfg, ota, ota_backend,
+                             telemetry)(key)
     fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0,
-                               ota_backend=ota_backend))
+                               ota_backend=ota_backend, telemetry=telemetry))
     return fn(key)
 
 
@@ -323,19 +392,21 @@ def avg_grad_sq(history: History) -> jax.Array:
 def monte_carlo(
     env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None,
     ota_backend: str = "auto",
+    telemetry: Optional[TelemetryConfig] = None,
 ):
     """n_runs independent repetitions (the paper uses 20): vmapped.
 
-    Repeated calls with the same ``(env, policy, cfg, ota, n_runs)`` reuse
-    the compiled program; only the PRNG keys change between calls.  Caching
-    needs every argument hashable: envs holding jax arrays (e.g.
-    ``TabularMDP``) take the uncached path.
+    Repeated calls with the same ``(env, policy, cfg, ota, n_runs,
+    telemetry)`` reuse the compiled program; only the PRNG keys change
+    between calls.  Caching needs every argument hashable: envs holding
+    jax arrays (e.g. ``TabularMDP``) take the uncached path.
     """
+    telemetry = _active_telemetry(telemetry)
     keys = jax.random.split(key, n_runs)
-    if _hashable(env, policy, cfg, ota):
+    if _hashable(env, policy, cfg, ota, telemetry):
         return _compiled_monte_carlo(env, policy, cfg, ota, n_runs,
-                                     ota_backend)(keys)
+                                     ota_backend, telemetry)(keys)
     fn = jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota,
-                      ota_backend=ota_backend)[1]))
+                      ota_backend=ota_backend, telemetry=telemetry)[1]))
     return fn(keys)

@@ -345,6 +345,50 @@ def sample_gains(cfg: OTAConfig, key: jax.Array, n_agents: int) -> jax.Array:
     return c
 
 
+def signal_power_sq(grads_stacked: PyTree, gains: jax.Array) -> jax.Array:
+    """``||sum_i h_i g_i||^2`` — the received signal power of one uplink.
+
+    Recomputes the combine of :func:`_aggregate_stacked_xla` on the same
+    operands (identical op sequence, so XLA CSEs it against the aggregate
+    when both appear in one program); the telemetry SNR probe divides this
+    by the per-dimension noise power ``d * sigma_z^2``.
+    """
+    leading = jax.tree.leaves(grads_stacked)[0].shape[0]
+
+    def _combine(g):
+        hb = gains.reshape((leading,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.sum(hb * g, axis=0)
+
+    v = jax.tree.map(_combine, grads_stacked)
+    return sum(jnp.sum(jnp.square(leaf)) for leaf in jax.tree.leaves(v))
+
+
+def effective_gain_mean(cfg: Optional[OTAConfig],
+                        n_agents: Optional[int] = None) -> Scalar:
+    """The closed-form effective gain mean ``m_h`` a config realises — the
+    reference the telemetry moment-drift probe compares ``mean(h)`` against.
+
+    Resolution order: exact uplink -> 1; a sweep-packed ``update_scale``
+    (``1 / (N * m_eff)`` in float64) inverts back to the per-lane effective
+    mean; otherwise the channel mean when no power control is set (possibly
+    a traced ``BatchedChannel`` moment), else the closed-form/Monte-Carlo
+    ``effective_moments``.  Falls back to the raw channel mean when traced
+    power-control parameters make the closed form unavailable (the drift
+    then includes the power-policy effect — documented approximation).
+    """
+    if cfg is None:
+        return 1.0
+    if cfg.debias and cfg.update_scale is not None and n_agents is not None:
+        return 1.0 / (n_agents * cfg.update_scale)
+    if cfg.power_control is None:
+        return cfg.channel.mean
+    try:
+        return effective_moments(cfg.channel, cfg.power_control,
+                                 n_agents=n_agents)[0]
+    except TypeError:  # traced/unhashable channel or policy params
+        return cfg.channel.mean
+
+
 def _server_epilogue(
     cfg: OTAConfig,
     key_n: jax.Array,

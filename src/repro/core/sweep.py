@@ -76,6 +76,9 @@ from repro.rl.envs import (
 )
 from repro.rl.envs import check_agent_count as check_env_agent_count
 from repro.rl.envs import default_policy as env_default_policy
+from repro.telemetry import trace as rtrace
+from repro.telemetry import probes as _probes
+from repro.telemetry.probes import RoundTelemetry, TelemetryConfig
 
 # Modes for laying scenarios into the partition program.  ``vmap`` (default)
 # batches lanes into one vectorised computation — fastest on one device, and
@@ -390,7 +393,8 @@ def _pack_partition(part: Partition) -> Dict[str, Any]:
     return packed
 
 
-def _make_lane(env, policy, part: Partition):
+def _make_lane(env, policy, part: Partition,
+               telemetry: Optional[TelemetryConfig] = None):
     """Build lane(packed_slice, keys) -> History(stacked over mc_runs).
 
     ``packed_slice`` holds only the *varying* axes (scalar tracers inside
@@ -440,13 +444,15 @@ def _make_lane(env, policy, part: Partition):
             if "update_scale" in packed:
                 ota = replace(ota, update_scale=packed["update_scale"])
         return jax.vmap(
-            lambda k: fedpg.run(env_l, lane_policy, cfg, k, ota=ota)[1]
+            lambda k: fedpg.run(env_l, lane_policy, cfg, k, ota=ota,
+                                telemetry=telemetry)[1]
         )(keys)
 
     return lane
 
 
-def lane_program(env, policy, part: Partition, mc_runs: int = 2):
+def lane_program(env, policy, part: Partition, mc_runs: int = 2,
+                 telemetry: Optional[TelemetryConfig] = None):
     """The partition's program, exposed for structural inspection.
 
     Returns ``(packed, fn, keys)`` where ``fn(packed, keys)`` is exactly the
@@ -460,7 +466,8 @@ def lane_program(env, policy, part: Partition, mc_runs: int = 2):
     program, while constant axes stay closed-over Python literals.
     """
     packed = _pack_partition(part)
-    lane = _make_lane(env, policy, part)
+    lane = _make_lane(env, policy, part,
+                      telemetry=fedpg._active_telemetry(telemetry))
     keys = jax.random.split(jax.random.key(0), mc_runs)
     fn = jax.vmap(lane, in_axes=(0, None)) if packed else lane
     return packed, fn, keys
@@ -514,7 +521,19 @@ class SweepResult:
         return len(self.scenarios)
 
     def scenario_history(self, i: int) -> History:
-        return History(*(np.asarray(x[i]) for x in self.history))
+        # tree.map (not a positional splat) so the optional telemetry
+        # subtree — None when probes were off — passes through untouched.
+        return jax.tree.map(lambda x: np.asarray(x[i]), self.history)
+
+    def telemetry_summary(self, i: int) -> Optional[Dict[str, Any]]:
+        """NaN/inf-aware mean of each in-jit probe for scenario ``i`` (see
+        ``repro.telemetry.probes.summarize``); None when the sweep ran
+        without telemetry."""
+        if self.history.telemetry is None:
+            return None
+        tel = jax.tree.map(lambda x: np.asarray(x[i]),
+                           self.history.telemetry)
+        return _probes.summarize(tel)
 
     def final_reward(self, i: int, tail: int = 20) -> float:
         # jnp reductions, matching benchmarks.common exactly.
@@ -543,6 +562,10 @@ class SweepResult:
             row["final_reward"] = self.final_reward(i, tail)
             row["avg_grad_sq"] = self.avg_grad_sq(i)
             row["mean_gain"] = float(np.mean(np.asarray(self.history.gain_mean[i])))
+            tel = self.telemetry_summary(i)
+            if tel is not None:
+                for k, v in tel.items():
+                    row[f"telemetry_{k}"] = v
             rows.append(row)
         return rows
 
@@ -594,6 +617,7 @@ def sweep(
     *,
     mode: str = "vmap",
     mesh: Any = None,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> SweepResult:
     """Run every scenario x mc_runs, one compiled program per partition.
 
@@ -611,7 +635,14 @@ def sweep(
     all devices on the lane axis), dispatches partitions asynchronously and
     defers ``block_until_ready`` to result materialisation; lanes stay
     bit-identical to ``mode="vmap"`` (see ``repro.core.distribute``).
+
+    ``telemetry`` (a :class:`repro.telemetry.TelemetryConfig` with active
+    probes) fills ``SweepResult.history.telemetry`` with ``(S, mc, K)``
+    per-round probe stacks; telemetry off leaves every partition program
+    bitwise identical to today's.  Partition execution is traced as
+    ``repro.telemetry.trace`` spans either way.
     """
+    telemetry = fedpg._active_telemetry(telemetry)
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     sharded = mode == "sharded"
@@ -629,9 +660,7 @@ def sweep(
             mesh = distribute.default_sweep_mesh()
         n_devices = mesh.size
 
-    out_rewards: List[Optional[np.ndarray]] = [None] * len(scenarios)
-    out_grad_sq: List[Optional[np.ndarray]] = [None] * len(scenarios)
-    out_gain: List[Optional[np.ndarray]] = [None] * len(scenarios)
+    out_hist: List[Optional[History]] = [None] * len(scenarios)
 
     def collect(part: Partition, stacked: History, lanes: bool) -> None:
         """Materialise one partition: ONE device->host transfer per leaf,
@@ -641,17 +670,18 @@ def sweep(
         replicate-lanes (sharded mode) are masked off by the j < n slice."""
         s_np = jax.tree.map(np.asarray, stacked)
         for j, idx in enumerate(part.indices):
-            out_rewards[idx] = s_np.rewards[j] if lanes else s_np.rewards
-            out_grad_sq[idx] = s_np.grad_sq[j] if lanes else s_np.grad_sq
-            out_gain[idx] = s_np.gain_mean[j] if lanes else s_np.gain_mean
+            out_hist[idx] = (jax.tree.map(lambda a: a[j], s_np)
+                             if lanes else s_np)
 
     pending: List[Tuple[Partition, float, Any, Any]] = []
     for part in parts:
         packed = _pack_partition(part)
-        lane = _make_lane(env, policy, part)
-        t0 = time.perf_counter()
+        lane = _make_lane(env, policy, part, telemetry=telemetry)
         if sharded:
-            # async: launch and move on — drained after the loop
+            # async: launch and move on — drained after the loop.  A span
+            # can't straddle the deferred materialisation, so the dispatch
+            # -> ready wall time keeps a raw clock.
+            t0 = time.perf_counter()  # repro: noqa[raw-timing]
             stacked, placement = distribute.dispatch_partition(
                 lane, packed, keys, mesh)
             pending.append((part, t0, stacked, placement))
@@ -659,35 +689,41 @@ def sweep(
         # One jit per loop iteration is the design here, not the recompile
         # bug repro.analyze's jit-in-loop rule hunts: each partition is a
         # structurally distinct program and compiles exactly once.
-        if not packed:
-            # Every scenario in the partition is identical: run one lane and
-            # replicate its history.
-            stacked, lanes = jax.jit(lane)({}, keys), False  # repro: noqa[jit-in-loop]
-        elif mode == "vmap":
-            stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(  # repro: noqa[jit-in-loop]
-                packed, keys)
-            lanes = True
-        else:
-            stacked = jax.jit(  # repro: noqa[jit-in-loop]
-                lambda pk, ks: jax.lax.map(lambda p: lane(p, ks), pk)
-            )(packed, keys)
-            lanes = True
-        jax.block_until_ready(stacked)
-        part.wall_time_us = (time.perf_counter() - t0) * 1e6
+        with rtrace.span("partition", mode=mode,
+                         scenarios=len(part.indices)) as sp:
+            if not packed:
+                # Every scenario in the partition is identical: run one lane
+                # and replicate its history.
+                stacked, lanes = jax.jit(lane)({}, keys), False  # repro: noqa[jit-in-loop]
+            elif mode == "vmap":
+                stacked = jax.jit(jax.vmap(lane, in_axes=(0, None)))(  # repro: noqa[jit-in-loop]
+                    packed, keys)
+                lanes = True
+            else:
+                stacked = jax.jit(  # repro: noqa[jit-in-loop]
+                    lambda pk, ks: jax.lax.map(lambda p: lane(p, ks), pk)
+                )(packed, keys)
+                lanes = True
+            jax.block_until_ready(stacked)
+        part.wall_time_us = sp.duration_us
         collect(part, stacked, lanes)
 
     # sharded drain: the deferred block_until_ready — results materialise
     # here, padded replicate-lanes are masked off, wall time spans
     # dispatch -> ready per partition
     for part, t0, stacked, placement in pending:
-        jax.block_until_ready(stacked)
-        part.wall_time_us = (time.perf_counter() - t0) * 1e6
+        with rtrace.span("materialize", scenarios=len(part.indices)):
+            jax.block_until_ready(stacked)
+        part.wall_time_us = (time.perf_counter() - t0) * 1e6  # repro: noqa[raw-timing]
         collect(part, stacked, placement.n_lanes > 0)
 
     history = History(
-        rewards=_stack_histories(out_rewards),
-        grad_sq=_stack_histories(out_grad_sq),
-        gain_mean=_stack_histories(out_gain),
+        rewards=_stack_histories([h.rewards for h in out_hist]),
+        grad_sq=_stack_histories([h.grad_sq for h in out_hist]),
+        gain_mean=_stack_histories([h.gain_mean for h in out_hist]),
+        telemetry=None if out_hist[0].telemetry is None else RoundTelemetry(
+            *(_stack_histories([getattr(h.telemetry, f) for h in out_hist])
+              for f in RoundTelemetry._fields)),
     )
     return SweepResult(scenarios=scenarios, history=history, partitions=parts,
                        mc_runs=mc_runs, mode=mode, n_devices=n_devices)

@@ -171,6 +171,34 @@ def theorem2_floor(
     )
 
 
+def floor_report(
+    *,
+    n_agents: int,
+    batch_m: int,
+    m_h: float,
+    sigma_h2: float,
+    noise_sigma2: float,
+    V: float,
+) -> dict:
+    """Both K -> inf floors plus which one applies — the flat record run
+    ledgers attach to every measured scenario (``floor`` is the applicable
+    one: Theorem 1 when its channel condition holds and the floor is
+    finite, Theorem 2 otherwise)."""
+    kw = dict(n_agents=n_agents, batch_m=batch_m, m_h=m_h,
+              sigma_h2=sigma_h2, noise_sigma2=noise_sigma2, V=V)
+    f1 = theorem1_floor(**kw)
+    f2 = theorem2_floor(**kw)
+    ok = channel_condition_ok(n_agents, m_h, sigma_h2)
+    which = "theorem1" if ok and math.isfinite(f1) else "theorem2"
+    return {
+        "floor_theorem1": f1,
+        "floor_theorem2": f2,
+        "channel_condition_ok": ok,
+        "floor_which": which,
+        "floor": f1 if which == "theorem1" else f2,
+    }
+
+
 def applicable_bound(
     *,
     K: int,

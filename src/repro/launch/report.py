@@ -8,6 +8,7 @@ import argparse
 import glob
 import json
 import os
+import warnings
 from typing import Dict, List
 
 from repro.configs import ARCH_IDS
@@ -18,12 +19,26 @@ MESHES = ("pod16x16", "pod2x16x16")
 
 
 def load(dryrun_dir: str) -> Dict:
+    """Index dry-run records by (arch, shape, mesh, filename stem).
+
+    Malformed files — unparseable JSON, or records missing any of the
+    identifying keys — are skipped with a warning rather than crashing the
+    whole report: one bad artifact should not hide the rest."""
     recs = {}
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
-        r = json.load(open(path))
-        tag = ""
+        try:
+            with open(path) as f:
+                r = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            warnings.warn(f"skipping unreadable dry-run record {path}: {e}",
+                          stacklevel=2)
+            continue
+        if not isinstance(r, dict) or not all(
+                k in r for k in ("arch", "shape", "mesh")):
+            warnings.warn(f"skipping malformed dry-run record {path}: "
+                          "missing arch/shape/mesh", stacklevel=2)
+            continue
         base = os.path.basename(path)[:-5]
-        parts = base.split("_")
         recs[(r["arch"], r["shape"], r["mesh"], base)] = r
     return recs
 

@@ -1,0 +1,233 @@
+"""In-jit round probes: per-round diagnostics as extra scan outputs.
+
+A :class:`TelemetryConfig` passed to ``fedpg.make_round_fn`` /
+``fedpg.run`` / ``sweep()`` makes each communication round emit a
+:class:`RoundTelemetry` pytree alongside the existing metrics — the
+quantities the paper's analysis is stated in terms of but ``History``
+never recorded:
+
+=================  =========================================================
+``snr``            effective receive SNR ``||sum_i h_i g_i||^2 / (d sigma_z^2)``
+                   (scale-invariant: identical before/after the debias
+                   normalisation; ``inf`` for noiseless/exact uplinks)
+``grad_norm_pre``  mean per-agent local gradient norm (pre-aggregation)
+``grad_norm_post`` norm of the applied server update ``u_k`` (post-aggregation)
+``moment_drift``   realised ``mean(h)`` minus the closed-form effective
+                   ``m_h`` (``ota.effective_gain_mean``) — the debias error
+``dispersion``     per-agent grad-norm heterogeneity ``max_i||g_i|| / mean_i||g_i||``
+=================  =========================================================
+
+Everything is computed *inside* the jitted round (no extra dispatches);
+disabled individual probes emit NaN constants so the pytree structure stays
+static across configs.  With ``telemetry=None`` (the default) none of this
+code reaches the trace: the telemetry-off jaxpr — and therefore every
+golden trace — is bitwise identical to the pre-telemetry program.
+
+Both round forms are covered: the stacked/vmap form
+(:func:`stacked_round_probes`) and the ``agent_mesh`` shard_map form
+(:func:`sharded_round_probes`, psum/pmax reductions over the agent axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.ota import OTAConfig
+
+PyTree = Any
+
+
+def _ota():
+    # deferred: repro.core.fedpg imports this module at class-definition
+    # time, so a top-level `from repro.core import ota` would be circular
+    # when repro.telemetry is the entry point (e.g. the report CLI).
+    from repro.core import ota
+    return ota
+
+
+__all__ = ["RoundTelemetry", "TelemetryConfig", "sharded_round_probes",
+           "stacked_round_probes"]
+
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """Static (hashable) probe selection; all probes default on.
+
+    Hashability matters: the config joins the compiled-callable cache keys
+    in ``fedpg`` so telemetry-on and telemetry-off programs cache
+    separately.  A config with every probe off is *inactive* and compiles
+    the exact telemetry-off program (``active`` gates all emission).
+    """
+
+    snr: bool = True
+    grad_norms: bool = True
+    moment_drift: bool = True
+    dispersion: bool = True
+
+    @property
+    def active(self) -> bool:
+        return self.snr or self.grad_norms or self.moment_drift \
+            or self.dispersion
+
+
+class RoundTelemetry(NamedTuple):
+    """Per-round probe outputs (float32 scalars inside the round; stacked
+    to ``(K,)`` by the scan, ``(mc, K)`` by monte-carlo, ``(S, mc, K)`` by
+    the sweep engine).  Disabled probes hold NaN."""
+
+    snr: jax.Array
+    grad_norm_pre: jax.Array
+    grad_norm_post: jax.Array
+    moment_drift: jax.Array
+    dispersion: jax.Array
+
+
+def _nan() -> jax.Array:
+    return jnp.full((), jnp.nan, jnp.float32)
+
+
+def _leaf_norms(g: jax.Array, n: int) -> jax.Array:
+    return jnp.sum(jnp.square(g.astype(jnp.float32)).reshape(n, -1), axis=1)
+
+
+def _per_agent_norms(grads_stacked: PyTree) -> jax.Array:
+    """(N,) l2 norms of each agent's full gradient pytree."""
+    leaves = jax.tree.leaves(grads_stacked)
+    n = leaves[0].shape[0]
+    sq = sum(_leaf_norms(g, n) for g in leaves)
+    return jnp.sqrt(sq)
+
+
+def _param_dim(grads_stacked: PyTree) -> int:
+    """Static per-agent parameter count d (the AWGN dimension)."""
+    leaves = jax.tree.leaves(grads_stacked)
+    n = leaves[0].shape[0]
+    return sum(int(leaf.size) // n for leaf in leaves)
+
+
+def _snr_from(signal_sq: jax.Array, dim: int,
+              ota_cfg: OTAConfig) -> jax.Array:
+    sigma = jnp.asarray(ota_cfg.noise_sigma, jnp.float32)
+    return (signal_sq.astype(jnp.float32)
+            / (dim * jnp.square(sigma))).astype(jnp.float32)
+
+
+def _drift_reference(ota_cfg: Optional[OTAConfig], n_agents: int):
+    return _ota().effective_gain_mean(ota_cfg, n_agents)
+
+
+def stacked_round_probes(
+    config: TelemetryConfig,
+    *,
+    grads_stacked: PyTree,
+    gains: jax.Array,
+    ota_cfg: Optional[OTAConfig],
+    n_agents: int,
+    gain_mean: jax.Array,
+    update_norm: jax.Array,
+) -> RoundTelemetry:
+    """Probes for the vmap round form (leading-N gradient stacks).
+
+    ``gains`` is the sampled ``(N,)`` realisation (``1.0`` scalar when
+    exact); ``update_norm`` is ``||u_k||`` as derived by the round body.
+    """
+    snr = grad_pre = grad_post = drift = disp = _nan()
+    noisy = ota_cfg is not None and _ota()._noise_enabled(ota_cfg.noise_sigma)
+    if config.snr:
+        if not noisy:
+            snr = jnp.full((), jnp.inf, jnp.float32)
+        else:
+            sig = _ota().signal_power_sq(grads_stacked, gains)
+            snr = _snr_from(sig, _param_dim(grads_stacked), ota_cfg)
+    if config.grad_norms or config.dispersion:
+        norms = _per_agent_norms(grads_stacked)
+        if config.grad_norms:
+            grad_pre = jnp.mean(norms)
+            grad_post = update_norm.astype(jnp.float32)
+        if config.dispersion:
+            disp = jnp.max(norms) / jnp.mean(norms)
+    if config.moment_drift:
+        ref = _drift_reference(ota_cfg, n_agents)
+        drift = (gain_mean - ref).astype(jnp.float32)
+    return RoundTelemetry(snr=snr, grad_norm_pre=grad_pre,
+                          grad_norm_post=grad_post, moment_drift=drift,
+                          dispersion=disp)
+
+
+def sharded_round_probes(
+    config: TelemetryConfig,
+    *,
+    local_grads: PyTree,
+    local_gains: jax.Array,
+    ota_cfg: Optional[OTAConfig],
+    n_agents: int,
+    axis_name: str,
+    gain_mean: jax.Array,
+    update_norm: jax.Array,
+) -> RoundTelemetry:
+    """Probes for the agent-mesh shard_map round form.
+
+    ``local_grads`` leaves carry this shard's ``(n_local, ...)`` slice;
+    cross-shard reductions are ``psum`` (sums/means) and ``pmax`` (the
+    dispersion max), so every shard emits identical replicated values —
+    matching how the round's metrics are already reduced.
+    """
+    snr = grad_pre = grad_post = drift = disp = _nan()
+    noisy = ota_cfg is not None and _ota()._noise_enabled(ota_cfg.noise_sigma)
+    leaves = jax.tree.leaves(local_grads)
+    n_local = leaves[0].shape[0]
+    if config.snr:
+        if not noisy:
+            snr = jnp.full((), jnp.inf, jnp.float32)
+        else:
+            # local combine, global psum — the same v the aggregate psums
+            def _combine(g):
+                hb = local_gains.reshape(
+                    (n_local,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+                return jnp.sum(hb * g, axis=0)
+
+            v = jax.lax.psum(jax.tree.map(_combine, local_grads), axis_name)
+            sig = sum(jnp.sum(jnp.square(leaf))
+                      for leaf in jax.tree.leaves(v))
+            dim = sum(int(leaf.size) // n_local for leaf in leaves)
+            snr = _snr_from(sig, dim, ota_cfg)
+    if config.grad_norms or config.dispersion:
+        local_sq = sum(_leaf_norms(g, n_local) for g in leaves)
+        local_norms = jnp.sqrt(local_sq)
+        mean_norm = jax.lax.psum(jnp.sum(local_norms), axis_name) / n_agents
+        if config.grad_norms:
+            grad_pre = mean_norm
+            grad_post = update_norm.astype(jnp.float32)
+        if config.dispersion:
+            disp = jax.lax.pmax(jnp.max(local_norms), axis_name) / mean_norm
+    if config.moment_drift:
+        ref = _drift_reference(ota_cfg, n_agents)
+        drift = (gain_mean - ref).astype(jnp.float32)
+    return RoundTelemetry(snr=snr, grad_norm_pre=grad_pre,
+                          grad_norm_post=grad_post, moment_drift=drift,
+                          dispersion=disp)
+
+
+def summarize(telemetry) -> Optional[dict]:
+    """NaN-aware scalar summary of stacked RoundTelemetry arrays (numpy
+    side, for ledgers/tables): mean of each probe over every axis, with
+    all-NaN (disabled) probes reported as None."""
+    if telemetry is None:
+        return None
+    import numpy as np
+
+    out = {}
+    for name, arr in zip(RoundTelemetry._fields, telemetry):
+        a = np.asarray(arr, np.float64)
+        finite = a[np.isfinite(a)]
+        if finite.size:
+            out[name] = float(np.mean(finite))
+        elif np.isinf(a).any():
+            out[name] = float("inf")
+        else:
+            out[name] = None
+    return out

@@ -1,0 +1,232 @@
+"""Span tracer: the one timing mechanism for sweeps and benchmarks.
+
+Replaces the ad-hoc ``time.perf_counter`` arithmetic that used to be
+copy-pasted across ``sweep()`` and ``benchmarks/*.py`` with a span-tree
+API::
+
+    from repro.telemetry import trace
+
+    with trace.span("compile", partition=3) as sp:
+        compiled = jitted.lower(args).compile()
+    print(sp.duration_us)
+
+Spans nest (a ``with`` inside a ``with`` becomes a child span) and the
+whole tree exports as Chrome trace-event JSON — ``trace.export(path)``
+writes a ``{"traceEvents": [...]}`` document loadable in Perfetto or
+``chrome://tracing``.  The process-global tracer is what the module-level
+helpers operate on; ``Tracer`` instances can be used standalone (tests).
+
+This module is the *owner* of raw-clock access: the ``raw-timing`` analyze
+rule flags ``time.perf_counter()`` call sites anywhere outside
+``src/repro/telemetry/``, so new timing code must come through here.
+
+``jax_profile(logdir)`` optionally bridges a block to ``jax.profiler.trace``
+for XLA-level timelines next to the host-side spans; it degrades to a
+no-op when the profiler is unavailable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+__all__ = [
+    "Span", "Timing", "Tracer", "export", "get_tracer", "jax_profile",
+    "reset", "span", "spans", "timed_call", "to_chrome_trace",
+]
+
+
+@dataclass
+class Span:
+    """One timed interval.  ``duration_us`` is valid after the ``with``
+    block exits; ``attrs`` may be extended inside the block (they export
+    as the Chrome event's ``args``)."""
+
+    name: str
+    start_us: float
+    duration_us: float = 0.0
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    children: List["Span"] = field(default_factory=list)
+    tid: int = 0
+
+
+class Timing(float):
+    """A median-microseconds float that also carries the compile/run split.
+
+    ``float(t)`` (and all arithmetic) is the median run time per call in
+    microseconds, so existing ``emit(name, time_call(...), ...)`` callers
+    keep working; ``t.compile_us`` is the first-call (compile-inclusive)
+    wall time and ``t.run_us`` the steady-state median.
+    """
+
+    compile_us: Optional[float]
+    run_us: float
+
+    def __new__(cls, run_us: float, compile_us: Optional[float] = None):
+        self = float.__new__(cls, run_us)
+        self.run_us = float(run_us)
+        self.compile_us = None if compile_us is None else float(compile_us)
+        return self
+
+
+class Tracer:
+    """A span tree with a per-thread open-span stack."""
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+        self._stacks: Dict[int, List[Span]] = {}
+        self.roots: List[Span] = []
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    @contextmanager
+    def span(self, name: str, **attrs: Any) -> Iterator[Span]:
+        tid = threading.get_ident()
+        sp = Span(name=name, start_us=self._now_us(), attrs=dict(attrs),
+                  tid=tid & 0xFFFF)
+        with self._lock:
+            stack = self._stacks.setdefault(tid, [])
+            (stack[-1].children if stack else self.roots).append(sp)
+            stack.append(sp)
+        try:
+            yield sp
+        finally:
+            sp.duration_us = self._now_us() - sp.start_us
+            with self._lock:
+                self._stacks[tid].pop()
+
+    def reset(self) -> None:
+        self.__init__()
+
+    def spans(self) -> List[Span]:
+        return list(self.roots)
+
+    def to_chrome_trace(self) -> Dict[str, Any]:
+        """The span tree as a Chrome trace-event document (Perfetto-loadable):
+        one ``ph="X"`` complete event per span, µs timestamps."""
+        pid = os.getpid()
+        events: List[Dict[str, Any]] = [{
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": "repro"},
+        }]
+
+        def visit(sp: Span) -> None:
+            events.append({
+                "name": sp.name, "cat": "repro", "ph": "X",
+                "ts": sp.start_us, "dur": sp.duration_us,
+                "pid": pid, "tid": sp.tid,
+                "args": {k: _json_safe(v) for k, v in sp.attrs.items()},
+            })
+            for child in sp.children:
+                visit(child)
+
+        for root in self.roots:
+            visit(root)
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def export(self, path: str) -> Dict[str, Any]:
+        doc = self.to_chrome_trace()
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1)
+        return doc
+
+
+def _json_safe(v: Any) -> Any:
+    """Chrome's ``args`` values must be JSON: numbers/strings/bools pass
+    through (non-finite floats stringify), everything else reprs."""
+    if isinstance(v, bool) or v is None or isinstance(v, (int, str)):
+        return v
+    if isinstance(v, float):
+        return v if v == v and abs(v) != float("inf") else repr(v)
+    return repr(v)
+
+
+# ---------------------------------------------------------------------------
+# The process-global tracer (what sweep/benchmarks record into).
+# ---------------------------------------------------------------------------
+
+_TRACER = Tracer()
+
+
+def get_tracer() -> Tracer:
+    return _TRACER
+
+
+def span(name: str, **attrs: Any):
+    """``with trace.span("dispatch", partition=i) as sp: ...``"""
+    return _TRACER.span(name, **attrs)
+
+
+def reset() -> None:
+    _TRACER.reset()
+
+
+def spans() -> List[Span]:
+    return _TRACER.spans()
+
+
+def to_chrome_trace() -> Dict[str, Any]:
+    return _TRACER.to_chrome_trace()
+
+
+def export(path: str) -> Dict[str, Any]:
+    """Write the global span tree as Chrome trace JSON; returns the doc."""
+    return _TRACER.export(path)
+
+
+def timed_call(
+    fn: Callable,
+    *args: Any,
+    warmup: int = 1,
+    iters: int = 5,
+    block: Optional[Callable[[Any], Any]] = None,
+    name: Optional[str] = None,
+) -> Timing:
+    """Median wall time per call, with the compile/run split as spans.
+
+    The first warmup call runs inside a ``compile:<name>`` span (for jitted
+    callables that is where compilation lands); the timed iterations run
+    inside one ``run:<name>`` span.  ``block`` is applied to each result
+    before the clock stops (pass ``jax.block_until_ready`` for jax work —
+    this module deliberately does not import jax).
+    """
+    label = name or getattr(fn, "__name__", None) or "call"
+    sink = block if block is not None else (lambda x: x)
+    compile_us: Optional[float] = None
+    if warmup > 0:
+        with span(f"compile:{label}") as sp:
+            sink(fn(*args))
+        compile_us = sp.duration_us
+        for _ in range(warmup - 1):
+            sink(fn(*args))
+    times = []
+    with span(f"run:{label}", iters=iters) as sp:
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            sink(fn(*args))
+            times.append(time.perf_counter() - t0)
+    times.sort()
+    run_us = times[len(times) // 2] * 1e6
+    sp.attrs["median_us"] = run_us
+    return Timing(run_us, compile_us=compile_us)
+
+
+@contextmanager
+def jax_profile(logdir: str) -> Iterator[None]:
+    """Bridge a block to ``jax.profiler.trace(logdir)`` (XLA timeline next
+    to the host spans); silently a no-op when jax or its profiler is
+    unavailable."""
+    try:
+        from jax import profiler
+        ctx = profiler.trace(str(logdir))
+    except Exception:
+        yield
+        return
+    with ctx:
+        yield

@@ -196,6 +196,49 @@ def test_xla_flags_excludes_owner_module():
 
 
 # ---------------------------------------------------------------------------
+# raw-timing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("line", [
+    "t0 = time.perf_counter()",
+    "t0 = time.perf_counter_ns()",
+    "t0 = time.monotonic()",
+])
+def test_raw_timing_trips_on_clock_calls(line):
+    fs = _scan(f"import time\n{line}\n", "raw-timing")
+    assert _ids(fs) == ["raw-timing"]
+
+
+def test_raw_timing_trips_through_aliases():
+    fs = _scan("import time as t\nx = t.perf_counter()\n", "raw-timing")
+    assert _ids(fs) == ["raw-timing"]
+    fs = _scan("from time import perf_counter as pc\nx = pc()\n",
+               "raw-timing")
+    assert _ids(fs) == ["raw-timing"]
+
+
+def test_raw_timing_clean_on_span_usage_and_time_time():
+    src = ("import time\n"
+           "from repro.telemetry import trace\n"
+           "ts = time.time()\n"
+           "with trace.span('work'):\n"
+           "    pass\n")
+    assert _scan(src, "raw-timing") == []
+
+
+def test_raw_timing_noqa_suppresses():
+    src = ("import time\n"
+           "t0 = time.perf_counter()  # repro: noqa[raw-timing]\n")
+    assert _scan(src, "raw-timing") == []
+
+
+def test_raw_timing_excludes_owner_package():
+    fs = _scan("import time\nt0 = time.perf_counter()\n", "raw-timing",
+               relpath="src/repro/telemetry/trace.py")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
 # in-jit pitfalls
 # ---------------------------------------------------------------------------
 
@@ -353,12 +396,14 @@ def test_suppressed_findings_still_counted():
 
 _PLANTED = '''\
 import os
+import time
 import jax
 import jax.numpy as jnp
 import numpy as np
 from repro.core.ota import exact_aggregate
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+t0 = time.perf_counter()
 
 def reuse(key):
     a = jax.random.normal(key)
@@ -376,7 +421,7 @@ def loop(fns):
 
 _ALL_RULE_CLASSES = [
     "deprecated-aggregation", "jit-in-loop", "key-reuse", "np-under-trace",
-    "traced-branch", "tracer-leak", "xla-flags",
+    "raw-timing", "traced-branch", "tracer-leak", "xla-flags",
 ]
 
 

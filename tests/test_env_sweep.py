@@ -379,5 +379,7 @@ def test_lqr_scenario_through_sweep():
                                 2, ota=s.ota_config())
         got = res.scenario_history(i)
         for a, b in zip(ref, got):
+            if a is None and b is None:  # telemetry off on both sides
+                continue
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6)

@@ -149,6 +149,31 @@ def test_golden_trace(family, request):
                     err_msg=f"{family}/{uplink}/{field} (rtol={rtol})")
 
 
+def test_golden_unchanged_by_telemetry():
+    """In-jit telemetry probes must not perturb the trained metrics: the
+    landmark family re-run with every probe enabled fingerprints bitwise
+    identical to the stored (telemetry-off) goldens."""
+    from repro.telemetry import TelemetryConfig
+
+    path = GOLDEN_DIR / "landmark.json"
+    if not path.exists():
+        pytest.skip("landmark golden missing — generate with --update-golden")
+    stored = json.loads(path.read_text())["uplinks"]
+
+    env = make_env("landmark")
+    scens = [Scenario(env=env, tag=f"landmark:{up}", **kw, **SMALL)
+             for up, kw in _uplinks().items()]
+    res = sweep(None, None, scens, jax.random.key(KEY_SEED), MC_RUNS,
+                telemetry=TelemetryConfig())
+    assert res.history.telemetry is not None
+    for i, uplink in enumerate(_uplinks()):
+        fp = fingerprint(res.scenario_history(i))
+        for field, vals in fp.items():
+            assert vals == stored[uplink][field], (
+                f"telemetry-on landmark/{uplink}/{field}: {vals} != golden "
+                f"{stored[uplink][field]}")
+
+
 def test_golden_covers_every_family_x_uplink():
     """The canonical grid really is families x uplinks, each exactly once."""
     cases = golden_cases()

@@ -1,0 +1,323 @@
+"""Observability tests: in-jit probes, span tracer, run ledger.
+
+The load-bearing invariant: telemetry OFF (None or an all-probes-off
+config) emits a program bitwise identical to the pre-telemetry one — the
+jaxpr equality here plus the golden-trace suite pin it.  Probe *math* is
+checked against hand-computed references on tiny fixed inputs.
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedpg, theory
+from repro.core.channel import FixedGainChannel, RayleighChannel
+from repro.core.ota import OTAConfig
+from repro.core.sweep import grid, sweep
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+from repro.telemetry import (
+    Ledger, RoundTelemetry, TelemetryConfig, read_ledger, set_ledger,
+    using_ledger,
+)
+from repro.telemetry import trace as rtrace
+from repro.telemetry import probes
+from repro.telemetry.report import render
+
+SMALL = dict(n_agents=3, batch_m=2, horizon=6, n_rounds=4)
+
+ALL_OFF = TelemetryConfig(snr=False, grad_norms=False, moment_drift=False,
+                          dispersion=False)
+
+
+def _setting():
+    return LandmarkNav(), MLPPolicy()
+
+
+def _rayleigh_ota():
+    return OTAConfig(channel=RayleighChannel(), noise_sigma=0.1, debias=True)
+
+
+def _strip_addresses(jaxpr_text: str) -> str:
+    # function-object reprs in jvp_jaxpr_thunk params carry addresses
+    return re.sub(r"0x[0-9a-f]+", "0x", jaxpr_text)
+
+
+# ---------------------------------------------------------------------------
+# telemetry off == pre-telemetry program
+# ---------------------------------------------------------------------------
+
+def test_history_prefix_compatible():
+    r, g, m = jnp.zeros(3), jnp.ones(3), jnp.ones(3)
+    h = fedpg.History(r, g, m)  # 3-positional construction still works
+    assert h.telemetry is None
+    assert len(jax.tree.leaves(h)) == 3  # None is an empty subtree
+
+
+@pytest.mark.parametrize("uplink", ["exact", "rayleigh"])
+def test_all_off_config_is_bitwise_off(uplink):
+    env, pol = _setting()
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ota = None if uplink == "exact" else _rayleigh_ota()
+    key = jax.random.key(0)
+    j_none = jax.make_jaxpr(
+        lambda k: fedpg.run(env, pol, cfg, k, ota=ota))(key)
+    j_off = jax.make_jaxpr(
+        lambda k: fedpg.run(env, pol, cfg, k, ota=ota, telemetry=ALL_OFF))(key)
+    assert _strip_addresses(str(j_none)) == _strip_addresses(str(j_off))
+
+
+def test_telemetry_on_leaves_metrics_bitwise_identical():
+    env, pol = _setting()
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ota = _rayleigh_ota()
+    key = jax.random.key(0)
+    h_off = fedpg.run_jit(env, pol, cfg, key, ota=ota)[1]
+    h_on = fedpg.run_jit(env, pol, cfg, key, ota=ota,
+                         telemetry=TelemetryConfig())[1]
+    for name in ("rewards", "grad_sq", "gain_mean"):
+        a = np.asarray(getattr(h_off, name))
+        b = np.asarray(getattr(h_on, name))
+        assert (a == b).all(), name
+    assert h_off.telemetry is None
+    assert isinstance(h_on.telemetry, RoundTelemetry)
+    assert h_on.telemetry.snr.shape == (SMALL["n_rounds"],)
+
+
+# ---------------------------------------------------------------------------
+# probe math vs hand-computed references
+# ---------------------------------------------------------------------------
+
+def test_stacked_probes_hand_computed():
+    # 2 agents, 1-leaf pytree of shape (2, 2); everything exactly known
+    grads = {"w": jnp.array([[3.0, 4.0], [0.0, 12.0]])}  # norms 5, 12
+    gains = jnp.array([2.0, 0.5])
+    ota = OTAConfig(channel=FixedGainChannel(gain=1.0), noise_sigma=0.5)
+    tel = probes.stacked_round_probes(
+        TelemetryConfig(), grads_stacked=grads, gains=gains, ota_cfg=ota,
+        n_agents=2, gain_mean=jnp.mean(gains), update_norm=jnp.asarray(7.0))
+    # sum_i h_i g_i = 2*[3,4] + 0.5*[0,12] = [6, 14]; ||.||^2 = 232
+    # snr = 232 / (d=2 * sigma^2=0.25) = 464
+    assert np.isclose(float(tel.snr), 464.0, rtol=1e-6)
+    assert np.isclose(float(tel.grad_norm_pre), (5.0 + 12.0) / 2, rtol=1e-6)
+    assert float(tel.grad_norm_post) == 7.0
+    # FixedGain(1.0), no power control: reference is channel.mean = 1.0
+    assert np.isclose(float(tel.moment_drift), 1.25 - 1.0, rtol=1e-6)
+    assert np.isclose(float(tel.dispersion), 12.0 / 8.5, rtol=1e-6)
+
+
+def test_stacked_probes_disabled_fields_are_nan():
+    grads = {"w": jnp.ones((2, 3))}
+    tel = probes.stacked_round_probes(
+        TelemetryConfig(snr=False, grad_norms=False, dispersion=False),
+        grads_stacked=grads, gains=jnp.ones((2,)), ota_cfg=None, n_agents=2,
+        gain_mean=jnp.ones(()), update_norm=jnp.ones(()))
+    assert np.isnan(float(tel.snr))
+    assert np.isnan(float(tel.grad_norm_pre))
+    assert np.isnan(float(tel.dispersion))
+    assert np.isfinite(float(tel.moment_drift))
+
+
+def test_exact_uplink_probes():
+    """Noiseless/exact: SNR is inf, moment drift exactly 0."""
+    env, pol = _setting()
+    cfg = fedpg.FedPGConfig(**SMALL)
+    h = fedpg.run_jit(env, pol, cfg, jax.random.key(0),
+                      telemetry=TelemetryConfig())[1]
+    assert np.isinf(np.asarray(h.telemetry.snr)).all()
+    assert (np.asarray(h.telemetry.moment_drift) == 0.0).all()
+    assert (np.asarray(h.telemetry.dispersion) >= 1.0).all()
+
+
+def test_fixed_gain_drift_is_zero():
+    """Deterministic channel: realised mean(h) == closed-form m_h, so the
+    drift probe must return exactly 0 every round."""
+    env, pol = _setting()
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ota = OTAConfig(channel=FixedGainChannel(gain=0.7), noise_sigma=0.05)
+    h = fedpg.run_jit(env, pol, cfg, jax.random.key(0), ota=ota,
+                      telemetry=TelemetryConfig())[1]
+    np.testing.assert_allclose(np.asarray(h.telemetry.moment_drift), 0.0,
+                               atol=1e-6)
+
+
+def test_sharded_probes_match_vmap():
+    """The shard_map probe reductions agree with the stacked form on a
+    deterministic channel (the random realisation is shared)."""
+    from repro.core import distribute
+
+    env, pol = _setting()
+    cfg = fedpg.FedPGConfig(n_agents=4, batch_m=2, horizon=6, n_rounds=3)
+    mesh = distribute.agent_mesh_for(cfg.n_agents)
+    ota = OTAConfig(channel=FixedGainChannel(gain=0.8), noise_sigma=0.05,
+                    debias=True)
+    key = jax.random.key(0)
+    tc = TelemetryConfig()
+    _, h_v = fedpg.run(env, pol, cfg, key, ota=ota, telemetry=tc)
+    _, h_s = fedpg.run(env, pol, cfg, key, ota=ota, telemetry=tc,
+                       agent_mesh=mesh)
+    for f in RoundTelemetry._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(h_v.telemetry, f)),
+            np.asarray(getattr(h_s.telemetry, f)), rtol=1e-4, err_msg=f)
+
+
+def test_summarize():
+    tel = RoundTelemetry(
+        snr=np.array([np.inf, np.inf]),
+        grad_norm_pre=np.array([1.0, 3.0]),
+        grad_norm_post=np.array([2.0, 2.0]),
+        moment_drift=np.array([np.nan, np.nan]),
+        dispersion=np.array([1.0, 2.0]))
+    s = probes.summarize(tel)
+    assert s["snr"] == float("inf")
+    assert s["grad_norm_pre"] == 2.0
+    assert s["moment_drift"] is None
+    assert probes.summarize(None) is None
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep_pair():
+    env, pol = _setting()
+    scens = grid(channel=[RayleighChannel()], noise_sigma=[1e-2, 1e-1],
+                 debias=True, **SMALL)
+    key = jax.random.key(0)
+    off = sweep(env, pol, scens, key, 2)
+    on = sweep(env, pol, scens, key, 2, telemetry=TelemetryConfig())
+    return off, on
+
+
+def test_sweep_telemetry_shapes_and_bitwise(sweep_pair):
+    off, on = sweep_pair
+    assert off.history.telemetry is None
+    assert on.history.telemetry.snr.shape == (2, 2, SMALL["n_rounds"])
+    assert (np.asarray(on.history.rewards)
+            == np.asarray(off.history.rewards)).all()
+    assert (np.asarray(on.history.grad_sq)
+            == np.asarray(off.history.grad_sq)).all()
+
+
+def test_sweep_scenario_accessors(sweep_pair):
+    off, on = sweep_pair
+    assert off.scenario_history(0).telemetry is None
+    assert off.telemetry_summary(0) is None
+    sh = on.scenario_history(1)
+    assert sh.telemetry.snr.shape == (2, SMALL["n_rounds"])
+    summ = on.telemetry_summary(1)
+    assert set(summ) == set(RoundTelemetry._fields)
+    assert summ["snr"] > 0
+    row = on.to_dicts()[0]
+    assert "telemetry_snr" in row and "telemetry_dispersion" in row
+    assert "telemetry_snr" not in off.to_dicts()[0]
+
+
+def test_sweep_records_partition_spans(sweep_pair):
+    names = [s.name for s in rtrace.spans()]
+    assert "partition" in names
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_chrome_export(tmp_path):
+    tr = rtrace.Tracer()
+    with tr.span("outer", label="a") as outer:
+        with tr.span("inner"):
+            pass
+    assert outer.duration_us > 0
+    assert [c.name for c in outer.children] == ["inner"]
+
+    doc = tr.to_chrome_trace()
+    text = json.dumps(doc)  # must be valid strict JSON
+    back = json.loads(text)
+    complete = [e for e in back["traceEvents"] if e["ph"] == "X"]
+    assert {e["name"] for e in complete} == {"outer", "inner"}
+    for e in complete:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+
+    path = tmp_path / "trace.json"
+    tr2 = rtrace.Tracer()
+    with tr2.span("solo"):
+        pass
+    tr2.export(str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_timed_call_timing():
+    t = rtrace.timed_call(lambda: sum(range(100)), warmup=1, iters=3,
+                          name="toy")
+    assert isinstance(t, rtrace.Timing)
+    assert float(t) == t.run_us > 0
+    assert t.compile_us is not None
+    assert f"{t:.1f}"  # format like the plain float it replaced
+
+
+def test_time_call_returns_timing():
+    from benchmarks.common import time_call
+
+    t = time_call(jax.jit(lambda x: x * 2), jnp.ones(4), iters=2)
+    assert isinstance(t, rtrace.Timing)
+    assert t.compile_us is not None and t.compile_us > 0
+
+
+# ---------------------------------------------------------------------------
+# ledger + report
+# ---------------------------------------------------------------------------
+
+def test_ledger_schema_and_report(tmp_path, sweep_pair):
+    _, on = sweep_pair
+    path = tmp_path / "LEDGER.jsonl"
+    consts = theory.MDPConstants(G=1.0, F=0.5, l_bar=1.0, gamma=0.9)
+    with Ledger(str(path)) as led:
+        led.log_platform()
+        with led.count_compiles(label="noop"):
+            pass
+        led.log_sweep(on, constants=consts, label="unit")
+    events = read_ledger(str(path))
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "ledger_start"
+    assert "platform" in kinds and "compiles" in kinds and "sweep" in kinds
+    scen = [e for e in events if e["kind"] == "scenario"]
+    assert len(scen) == len(on.scenarios)
+    for ev in scen:
+        assert {"avg_grad_sq", "final_reward", "floor", "floor_which",
+                "distance_to_floor", "telemetry"} <= set(ev)
+        assert ev["floor_which"] in ("theorem1", "theorem2")
+    text = render(events, title="Unit")
+    assert "avg_grad_sq vs theory floors" in text
+    assert "## Platform" in text
+
+
+def test_ledger_skips_malformed_lines(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"kind": "ok", "ts": 1}\nnot json\n{"no_kind": 1}\n')
+    with pytest.warns(UserWarning):
+        events = read_ledger(str(path))
+    assert [e["kind"] for e in events] == ["ok"]
+
+
+def test_ambient_ledger(tmp_path):
+    path = tmp_path / "amb.jsonl"
+    from repro.telemetry import get_ledger
+
+    assert get_ledger() is None
+    with Ledger(str(path)) as led, using_ledger(led):
+        assert get_ledger() is led
+    assert get_ledger() is None
+    set_ledger(None)  # idempotent
+
+
+def test_floor_report():
+    fr = theory.floor_report(n_agents=10, batch_m=10, m_h=1.0, sigma_h2=0.2,
+                             noise_sigma2=1e-4, V=2.0)
+    assert fr["floor_which"] in ("theorem1", "theorem2")
+    assert fr["floor"] in (fr["floor_theorem1"], fr["floor_theorem2"])
+    assert fr["floor"] > 0
