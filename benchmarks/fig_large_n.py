@@ -1,0 +1,138 @@
+"""Scaling in N: streamed (``agent_blocks``) vs stacked round memory.
+
+The paper's regime is a *massive* fleet (Section I: the motivation is
+"a huge number of agents"); the stacked round materialises the full
+(N, M, H, ...) trajectory batch and the (N, d) gradient stack, so its
+peak temp memory grows with N x d and a 10^5-agent fleet blows past any
+accelerator's HBM.  The blocked-scan streamed form keeps only one
+O(agent_blocks x d) block live at a time; the only O(N) state left is
+the per-agent PRNG key material (8 B/agent plus padding copies — the
+price of keeping the key streams bitwise-identical to the stacked form).
+
+For each fleet size this bench compiles both forms and reads the XLA
+``memory_analysis`` (no execution needed for the memory claim — the
+stacked 10^5 program is compiled but only *executed* where it is cheap),
+then times the streamed form for throughput.  Emits rows consumed by
+``benchmarks/run.py --json`` → ``BENCH_large_n.json`` in CI:
+
+* ``large_n_streamed_{N}`` — measured wall time, temp/arg/out bytes,
+  rounds/s and agent-rounds/s,
+* ``large_n_stacked_{N}``  — temp bytes (executed only when cheap),
+* ``large_n_summary``      — the per-agent temp-byte comparison at the
+  largest N and the streamed temp ratio across the N range.
+
+On a multi-device host (``REPRO_EMULATED_DEVICES=8``) one extra row runs
+the composed shard_map + streaming path at the smoke fleet size.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import fedpg, ota
+from repro.core.channel import RayleighChannel
+from repro.rl.envs import make_env
+
+from benchmarks.common import emit, time_call
+
+# full tier covers the paper-motivating 10^5 fleet; quick (CI smoke) stops
+# at 10^4 — coverage of the scaling trend, not the headline point
+SIZES = (100, 1_000, 10_000, 100_000)
+QUICK_SIZES = SIZES[:3]
+
+AGENT_BLOCKS = 32
+# executing the stacked form past this N costs real time/memory without
+# adding information: memory_analysis comes from the compile alone
+STACKED_EXEC_LIMIT = 1_000
+
+
+def _mem(compiled):
+    ma = compiled.memory_analysis()
+    return (int(ma.temp_size_in_bytes), int(ma.argument_size_in_bytes),
+            int(ma.output_size_in_bytes))
+
+
+def run(quick: bool = False):
+    env = make_env("landmark")
+    policy = env.default_policy()
+    ota_cfg = ota.OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
+                            debias=True)
+    key = jax.random.key(3)
+    sizes = QUICK_SIZES if quick else SIZES
+    # quick stops at 10^4 agents, so 2 rounds stays cheap there; the full
+    # tier runs a single round to keep the 10^5 execution bounded
+    n_rounds = 2 if quick else 1
+
+    temps = {}
+    for n in sizes:
+        cfg = fedpg.FedPGConfig(n_agents=n, batch_m=1, horizon=3,
+                                n_rounds=n_rounds)
+
+        # one fresh program per fleet size IS the experiment (its compile is
+        # excluded from the timing; memory_analysis needs the executable)
+        streamed = jax.jit(lambda k, c=cfg: fedpg.run(  # repro: noqa[jit-in-loop]
+            env, policy, c, k, ota=ota_cfg, agent_blocks=AGENT_BLOCKS))
+        comp = streamed.lower(key).compile()
+        temp, arg, out = _mem(comp)
+        temps[("streamed", n)] = temp
+        us = time_call(comp, key, iters=1 if n >= 10_000 else 3)
+        rounds_per_s = n_rounds / (float(us) * 1e-6)
+        emit(
+            f"large_n_streamed_{n}",
+            us,
+            f"agents={n};agent_blocks={AGENT_BLOCKS};rounds={n_rounds};"
+            f"temp_bytes={temp};arg_bytes={arg};out_bytes={out};"
+            f"temp_bytes_per_agent={temp / n:.1f};"
+            f"rounds_per_s={rounds_per_s:.2f};"
+            f"agent_rounds_per_s={rounds_per_s * n:.0f}",
+        )
+
+        stacked = jax.jit(lambda k, c=cfg: fedpg.run(  # repro: noqa[jit-in-loop]
+            env, policy, c, k, ota=ota_cfg))
+        comp_s = stacked.lower(key).compile()
+        temp_s, _, _ = _mem(comp_s)
+        temps[("stacked", n)] = temp_s
+        executed = n <= STACKED_EXEC_LIMIT
+        us_s = time_call(comp_s, key, iters=3) if executed else 0.0
+        emit(
+            f"large_n_stacked_{n}",
+            us_s,
+            f"agents={n};rounds={n_rounds};temp_bytes={temp_s};"
+            f"temp_bytes_per_agent={temp_s / n:.1f};"
+            f"executed={executed};"
+            f"note={'timed' if executed else 'memory_analysis_only'}",
+        )
+
+    n_max, n_min = max(sizes), min(sizes)
+    emit(
+        "large_n_summary",
+        0.0,
+        f"n_max={n_max};"
+        f"stacked_over_streamed_temp_at_n_max="
+        f"{temps[('stacked', n_max)] / temps[('streamed', n_max)]:.1f};"
+        f"streamed_temp_growth_{n_min}_to_{n_max}="
+        f"{temps[('streamed', n_max)] / temps[('streamed', n_min)]:.1f};"
+        f"stacked_temp_growth_{n_min}_to_{n_max}="
+        f"{temps[('stacked', n_max)] / temps[('stacked', n_min)]:.1f};"
+        f"note=streamed_growth_is_per_agent_key_material_only",
+    )
+
+    if jax.device_count() >= 2:
+        from repro.core import distribute
+
+        n = 10_000
+        mesh = distribute.agent_mesh_for(jax.device_count())
+        cfg = fedpg.FedPGConfig(n_agents=n + 1, batch_m=1, horizon=3,
+                                n_rounds=n_rounds)  # non-dividing: padded
+        fn = jax.jit(lambda k: fedpg.run(
+            env, policy, cfg, k, ota=ota_cfg, agent_mesh=mesh,
+            agent_blocks=AGENT_BLOCKS))
+        comp = fn.lower(key).compile()
+        temp, _, _ = _mem(comp)
+        us = time_call(comp, key, iters=1)
+        emit(
+            f"large_n_sharded_streamed_{n + 1}",
+            us,
+            f"agents={n + 1};shards={jax.device_count()};"
+            f"agent_blocks={AGENT_BLOCKS};temp_bytes={temp};"
+            f"padded=True",
+        )

@@ -22,8 +22,8 @@ import time
 
 from benchmarks import (  # noqa: E402
     et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
-    fig_env_zoo, fig_power_control, fig_scaling, microbench, ota_kernel,
-    roofline_table, theory_table,
+    fig_env_zoo, fig_large_n, fig_power_control, fig_scaling, microbench,
+    ota_kernel, roofline_table, theory_table,
 )
 from benchmarks.common import ROWS, emit
 from repro.telemetry import Ledger, set_ledger
@@ -51,6 +51,8 @@ SUITES = {
     "roofline": lambda quick: roofline_table.run(),
     # fused OTA kernel vs the XLA chain (BENCH_ota_kernel.json in CI)
     "ota_kernel": lambda quick: ota_kernel.run(quick=quick),
+    # streamed vs stacked round memory/throughput (BENCH_large_n.json in CI)
+    "large_n": lambda quick: fig_large_n.run(quick=quick),
 }
 
 

@@ -35,7 +35,17 @@ resulting jaxprs / compiled artifacts:
     The ``agent_mesh`` shard_map path's compiled HLO contains only the
     expected collective kinds (psum -> all-reduce); an unexpected
     all-gather / all-to-all / reduce-scatter means a resharding snuck into
-    the uplink.  Skipped (with a report note) on single-device hosts.
+    the uplink.  The streamed (``agent_blocks``) form — including a
+    non-dividing, phantom-padded fleet — is held to the same psum-only
+    contract.  Skipped (with a report note) on single-device hosts.
+
+``stream-contract``
+    The streaming (``agent_blocks``) forms' memory invariant, checked
+    structurally: every ``scan``/``while`` carry aval in the blocked
+    uplink jaxpr and in the blocked round program must be *identical*
+    across two fleet sizes at a fixed block size.  A carry that grows
+    with ``n_agents`` means the streamed form secretly materialises the
+    agent axis and the O(block × d) claim is false.
 
 Checkers emit the same :class:`~repro.analyze.findings.Finding` records as
 the AST layer; source anchors point at the module that owns the violated
@@ -445,10 +455,13 @@ def check_compile_budget(report: Report) -> None:
 _EXPECTED_COLLECTIVES = frozenset({"all-reduce"})
 
 # SPMD-partitioning jax.random.split across the mesh shuffles a few u32 key
-# words between devices as tiny collective-permutes (threefry plumbing).
-# Tolerate permutes up to this many wire bytes; a gradient-sized permute
-# (>= 4 bytes x param count x agents) still trips the audit.
+# words between devices as tiny collective-permutes (threefry plumbing), and
+# the phantom-agent key padding (gather + concatenate before shard_map)
+# likewise lowers to a tiny all-gather of key words.  Tolerate those kinds up
+# to this many wire bytes; a gradient-sized transfer (>= 4 bytes x param
+# count x agents) still trips the audit.
 _PERMUTE_BYTE_TOLERANCE = 1024
+_TOLERATED_SMALL_KINDS = frozenset({"collective-permute", "all-gather"})
 
 
 @register_check("collective-audit")
@@ -475,25 +488,131 @@ def check_collectives(report: Report) -> None:
                             n_rounds=2)
     ota = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3, debias=True)
 
-    fn = jax.jit(lambda k: fedpg.run(env, policy, cfg, k, ota=ota,
-                                     agent_mesh=mesh))
-    hlo = fn.lower(jax.random.key(0)).compile().as_text()
-    stats = parse_collective_bytes(hlo)
-    unexpected_set = set(stats.count_by_kind) - _EXPECTED_COLLECTIVES
-    if (stats.bytes_by_kind.get("collective-permute", 0.0)
-            <= _PERMUTE_BYTE_TOLERANCE):
-        unexpected_set.discard("collective-permute")
-    unexpected = sorted(unexpected_set)
-    if unexpected:
+    def audit(fn, label):
+        hlo = fn.lower(jax.random.key(0)).compile().as_text()
+        stats = parse_collective_bytes(hlo)
+        unexpected_set = set(stats.count_by_kind) - _EXPECTED_COLLECTIVES
+        for kind in _TOLERATED_SMALL_KINDS:
+            if stats.bytes_by_kind.get(kind, 0.0) <= _PERMUTE_BYTE_TOLERANCE:
+                unexpected_set.discard(kind)
+        unexpected = sorted(unexpected_set)
+        if unexpected:
+            report.findings.append(_finding(
+                "collective-audit", _FEDPG_PATH,
+                f"{label} round program contains unexpected collectives "
+                f"{unexpected} (expected only "
+                f"{sorted(_EXPECTED_COLLECTIVES)}; stats: {stats.summary()})"
+                " — a resharding snuck into the shard_map uplink"))
+        if not stats.count_by_kind:
+            report.findings.append(_finding(
+                "collective-audit", _FEDPG_PATH,
+                f"{label} round program contains no collectives at all — "
+                "the psum aggregation is not crossing the mesh",
+                severity="warning"))
+
+    audit(jax.jit(lambda k: fedpg.run(env, policy, cfg, k, ota=ota,
+                                      agent_mesh=mesh)),
+          "agent-mesh")
+    # the streamed form, on a fleet the mesh does NOT divide: the phantom
+    # padding + blocked scan must still lower to psum-only collectives
+    cfg_pad = fedpg.FedPGConfig(n_agents=n_agents + 1, batch_m=1, horizon=3,
+                                n_rounds=2)
+    audit(jax.jit(lambda k: fedpg.run(env, policy, cfg_pad, k, ota=ota,
+                                      agent_mesh=mesh, agent_blocks=1)),
+          "streamed agent-mesh (padded)")
+
+
+# ---------------------------------------------------------------------------
+# stream-contract
+# ---------------------------------------------------------------------------
+
+def _loop_carry_avals(closed_jaxpr) -> List[tuple]:
+    """Every ``scan`` / ``while`` carry aval in the jaxpr tree, as sorted
+    ``(primitive, shape, dtype)`` triples.
+
+    The streamed forms' memory claim lives here: a blocked program's loop
+    carries are the only state that survives across agent blocks, so their
+    avals must be a function of ``(agent_blocks, d)`` alone — comparing the
+    multiset across two fleet sizes at a fixed block is an exact structural
+    test for "peak state independent of N".
+    """
+    avals = []
+    for jx in _iter_jaxprs(closed_jaxpr.jaxpr):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "scan":
+                lo = eqn.params["num_consts"]
+                hi = lo + eqn.params["num_carry"]
+                carry = eqn.invars[lo:hi]
+            elif eqn.primitive.name == "while":
+                lo = (eqn.params["cond_nconsts"]
+                      + eqn.params["body_nconsts"])
+                carry = eqn.invars[lo:]
+            else:
+                continue
+            for v in carry:
+                avals.append((eqn.primitive.name, str(v.aval.shape),
+                              str(v.aval.dtype)))
+    return sorted(avals)
+
+
+@register_check("stream-contract")
+def check_stream_contract(report: Report) -> None:
+    import jax
+
+    from repro.core import fedpg, ota
+    from repro.core.channel import RayleighChannel
+    from repro.core.ota import OTAConfig, uplink_jaxpr
+    from repro.rl.envs import make_env
+
+    block = 2
+    small, large = 6, 24
+
+    # 1) the aggregate level: the blocked uplink jaxpr's loop carries must
+    #    not change when the fleet grows 4x at a fixed block size
+    noisy = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
+                      debias=True)
+    for cfg, tag in ((None, "exact"), (noisy, "noisy")):
+        for apply_form in (False, True):
+            form = "aggregate_apply" if apply_form else "aggregate"
+            carries = [
+                _loop_carry_avals(uplink_jaxpr(
+                    cfg, apply=apply_form, n_agents=n, agent_blocks=block))
+                for n in (small, large)
+            ]
+            if carries[0] != carries[1]:
+                report.findings.append(_finding(
+                    "stream-contract", _OTA_PATH,
+                    f"{form}/{tag}: blocked uplink loop carries differ "
+                    f"between n_agents={small} and n_agents={large} at "
+                    f"agent_blocks={block} — the scan carry grows with the "
+                    f"fleet (got {carries[0]} vs {carries[1]})"))
+            if not carries[0]:
+                report.findings.append(_finding(
+                    "stream-contract", _OTA_PATH,
+                    f"{form}/{tag}: blocked uplink jaxpr contains no "
+                    f"scan/while loops — agent_blocks={block} is not "
+                    "streaming at all"))
+
+    # 2) the round level: the full streamed round program (rollouts +
+    #    uplink + server pass) must likewise keep all loop state O(block x d)
+    env = make_env("landmark")
+    policy = env.default_policy()
+
+    def round_carries(n):
+        cfg = fedpg.FedPGConfig(n_agents=n, batch_m=1, horizon=3, n_rounds=2)
+        closed = jax.make_jaxpr(
+            lambda k: fedpg.run(env, policy, cfg, k, ota=noisy,
+                                agent_blocks=block))(jax.random.key(0))
+        return _loop_carry_avals(closed)
+
+    got = [round_carries(n) for n in (small, large)]
+    if got[0] != got[1]:
+        only_small = [a for a in got[0] if a not in got[1]]
+        only_large = [a for a in got[1] if a not in got[0]]
         report.findings.append(_finding(
-            "collective-audit", _FEDPG_PATH,
-            f"agent-mesh round program contains unexpected collectives "
-            f"{unexpected} (expected only {sorted(_EXPECTED_COLLECTIVES)}; "
-            f"stats: {stats.summary()}) — a resharding snuck into the "
-            "shard_map uplink"))
-    if not stats.count_by_kind:
-        report.findings.append(_finding(
-            "collective-audit", _FEDPG_PATH,
-            "agent-mesh round program contains no collectives at all — "
-            "the psum aggregation is not crossing the mesh",
-            severity="warning"))
+            "stream-contract", _FEDPG_PATH,
+            f"streamed round program loop carries differ between "
+            f"n_agents={small} and n_agents={large} at "
+            f"agent_blocks={block} — some loop state scales with the fleet "
+            f"(only at N={small}: {only_small}; only at N={large}: "
+            f"{only_large})"))

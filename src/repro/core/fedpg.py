@@ -85,6 +85,7 @@ def make_round_fn(
     agent_axis: str = "agents",
     ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
+    agent_blocks: Optional[int] = None,
 ):
     """One communication round: (theta, key) -> (theta', metrics).
 
@@ -115,12 +116,35 @@ def make_round_fn(
     tuple — in-jit per-round diagnostics, see ``repro.telemetry.probes``.
     With ``telemetry=None`` (or all probes off) the emitted program is
     bitwise identical to the pre-telemetry round.
+
+    ``agent_blocks`` streams the agent axis: rollouts, gradient estimation
+    and the channel superposition run in a ``lax.scan`` over blocks of that
+    many agents, so peak memory is O(agent_blocks × d) in the fleet size
+    (the scan carry holds one block of trajectories/gradients plus the
+    d-sized running sums; only O(N) per-agent *scalars* — gains, returns,
+    probe norms — are ever materialised).  Per-agent sampling keys and
+    channel gains are indexed by ABSOLUTE agent index, identically to the
+    unblocked round, and the cross-agent sums are strict sequential folds:
+    histories are bitwise-invariant to the choice of block size (any
+    partition of the agent axis, dividing or not — the tail block pads
+    masked phantom agents).  Relative to ``agent_blocks=None`` the gain
+    means are bitwise-identical and rewards/updates differ only at
+    floating-point reassociation level (XLA fuses the blocked rollouts and
+    the agent sum differently — last-mantissa-bit effects, ~1e-7
+    relative).  Composes with ``agent_mesh``:
+    each shard scans its local slice in blocks and the partial sums psum
+    across the mesh; a non-dividing ``n_agents`` is then padded with
+    masked phantom agents instead of raising.
     """
     telem = _active_telemetry(telemetry)
 
     if agent_mesh is not None:
         return _make_agent_sharded_round_fn(
             env, policy, cfg, ota_cfg, agent_mesh, agent_axis, ota_backend,
+            telemetry=telem, agent_blocks=agent_blocks)
+    if agent_blocks is not None:
+        return _make_streamed_round_fn(
+            env, policy, cfg, ota_cfg, agent_blocks, ota_backend,
             telemetry=telem)
 
     grad_fn = _estimator_grad(cfg)
@@ -176,10 +200,128 @@ def make_round_fn(
     return round_fn
 
 
+def _make_streamed_round_fn(
+    env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
+    agent_blocks: int, ota_backend: str = "auto",
+    telemetry: Optional[TelemetryConfig] = None,
+):
+    """The vmap round evaluated as a blocked scan over the agent axis.
+
+    Each scan step rolls out one block of ``agent_blocks`` agents (a vmap
+    *within* the block), folds their gradients into the running exact-mean
+    and channel-superposition accumulators (strict sequential folds — see
+    :func:`repro.core.ota.stream_fold_block`) and emits only O(block)
+    per-agent scalars (returns, probe norms) as scan outputs.  Peak memory
+    is therefore O(agent_blocks × d) in the fleet size.  Sampling keys and
+    channel gains are indexed by absolute agent index — the same
+    ``split(key_samp, N)`` / ``sample_gains(key_h, N)`` streams as the
+    unblocked round — so the emitted history is bitwise-invariant to the
+    choice of block size.
+    """
+    from repro.rl.sampler import discounted_return
+
+    grad_fn = _estimator_grad(cfg)
+    hetero = isinstance(env, HeterogeneousEnv)
+    if hetero:
+        check_agent_count(env, cfg.n_agents)
+    n_blocks, block, pad = ota.blocked_layout(cfg.n_agents, agent_blocks)
+    noisy = ota_cfg is not None
+    spec = ota._make_spec(ota_cfg, None, False, ota_backend)
+    pallas = not spec.exact and spec.resolved_backend() == "pallas"
+    wire_dt = ota._wire_dtype(ota_cfg) if pallas else None
+    want_norms = telemetry is not None and (
+        telemetry.grad_norms or telemetry.dispersion)
+
+    def round_fn(theta: PyTree, key: jax.Array):
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+        lane_stacks = dict(env.params) if hetero else {}
+        xs = {
+            "keys": ota.block_view(
+                ota.pad_agent_axis(agent_keys, pad), n_blocks, block),
+            "stacks": ota.block_view(
+                ota.pad_agent_axis(lane_stacks, pad), n_blocks, block),
+            "valid": ota.block_valid_mask(cfg.n_agents, n_blocks, block),
+        }
+        if noisy:
+            key_h, key_n = jax.random.split(key_chan)
+            h = ota.sample_gains(ota_cfg, key_h, cfg.n_agents)
+            hp = jnp.concatenate([h, jnp.zeros((pad,), h.dtype)]) \
+                if pad else h
+            xs["gains"] = hp.reshape(n_blocks, block)
+
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        def block_body(carry, x):
+            grads_b, trajs_b = jax.vmap(agent_grad)(x["keys"], x["stacks"])
+            gsum = ota.stream_fold_block(carry[0], grads_b, None, x["valid"])
+            ys = {"returns": discounted_return(trajs_b.losses, cfg.gamma)}
+            if want_norms:
+                ys["norms_sq"] = sum(
+                    _probes._leaf_norms(g, block)
+                    for g in jax.tree.leaves(grads_b))
+            if not noisy:
+                return (gsum,), ys
+            gb = jax.tree.map(lambda a: a.astype(jnp.float32), grads_b) \
+                if pallas else grads_b
+            v = ota.stream_fold_block(carry[1], gb, x["gains"], x["valid"],
+                                      wire_dtype=wire_dt)
+            return (gsum, v), ys
+
+        carry0 = (jax.tree.map(jnp.zeros_like, theta),)
+        if noisy:
+            vdt = (lambda p: jnp.float32) if pallas else (lambda p: p.dtype)
+            carry0 += (jax.tree.map(
+                lambda p: jnp.zeros(p.shape, vdt(p)), theta),)
+        carry, ys = jax.lax.scan(block_body, carry0, xs)
+
+        # per-agent scalars come back (n_blocks, block, ...); restore the
+        # absolute agent order and drop the phantom tail before reducing
+        # with the exact ops the unblocked round uses.
+        returns = ys["returns"].reshape(
+            (n_blocks * block,) + ys["returns"].shape[2:])[:cfg.n_agents]
+        reward = -jnp.mean(returns)
+        mean_grad = jax.tree.map(lambda s: s / cfg.n_agents, carry[0])
+        grad_sq = tree_global_norm_sq(mean_grad)
+
+        if not noisy:
+            gain_mean = jnp.ones(())
+            theta_next = jax.tree.map(
+                lambda p, u: p - cfg.alpha * u, theta, mean_grad)
+        else:
+            theta_next = ota.stream_finalize_apply(
+                ota_cfg, key_n, carry[1], theta, cfg.alpha, cfg.n_agents,
+                backend="pallas" if pallas else "xla")
+            gain_mean = jnp.mean(h)
+
+        if telemetry is None:
+            return theta_next, (reward, grad_sq, gain_mean)
+
+        if not noisy:
+            update_norm = jnp.sqrt(grad_sq)
+        else:
+            update_norm = jnp.sqrt(tree_global_norm_sq(jax.tree.map(
+                jnp.subtract, theta, theta_next))) / cfg.alpha
+        norms_sq = ys["norms_sq"].reshape(-1)[:cfg.n_agents] \
+            if want_norms else None
+        probes = _probes.streamed_round_probes(
+            telemetry, v=carry[1] if noisy else None, norms_sq=norms_sq,
+            ota_cfg=ota_cfg, n_agents=cfg.n_agents,
+            param_dim=sum(int(p.size) for p in jax.tree.leaves(theta)),
+            gain_mean=gain_mean, update_norm=update_norm)
+        return theta_next, (reward, grad_sq, gain_mean, probes)
+
+    return round_fn
+
+
 def _make_agent_sharded_round_fn(
     env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
     mesh, axis_name: str, ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
+    agent_blocks: Optional[int] = None,
 ):
     """The agent axis laid across ``mesh[axis_name]`` via shard_map.
 
@@ -189,6 +331,15 @@ def _make_agent_sharded_round_fn(
     the psum form (``ota.aggregate`` with ``local_stack=True``); metrics
     psum local partial sums, so every shard ends the round with identical
     (replicated) theta and metrics.
+
+    With ``agent_blocks`` each shard consumes its local slice as a blocked
+    scan (strict sequential folds, O(agent_blocks × d) peak memory per
+    shard) and the partial sums psum across the mesh.  A non-dividing
+    ``n_agents`` is then handled by padding the global stacks to
+    ``ceil(N / n_shards) * n_shards`` with masked phantom agents — their
+    gains and gradients fold exact zeros and every normaliser (reward,
+    gain mean, debias) uses the true agent count.  Without ``agent_blocks``
+    a non-dividing fleet still raises.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -204,10 +355,13 @@ def _make_agent_sharded_round_fn(
             f"agent mesh has no axis {axis_name!r}; axes are "
             f"{tuple(mesh.axis_names)}")
     n_shards = mesh.shape[axis_name]
-    if cfg.n_agents % n_shards != 0:
+    if cfg.n_agents % n_shards != 0 and agent_blocks is None:
         raise ValueError(
             f"n_agents={cfg.n_agents} does not divide across the "
-            f"{axis_name!r} mesh axis of size {n_shards}")
+            f"{axis_name!r} mesh axis of size {n_shards}; pass agent_blocks "
+            "to run with a masked phantom-agent tail instead")
+    n_local = -(-cfg.n_agents // n_shards)
+    pad_total = n_local * n_shards - cfg.n_agents
 
     def local_round(theta, agent_keys, lane_stacks, key_chan):
         # agent_keys/lane_stacks are this shard's (n_local,)-leading slices
@@ -249,16 +403,110 @@ def _make_agent_sharded_round_fn(
             update_norm=jnp.sqrt(tree_global_norm_sq(update)))
         return theta_next, (reward, grad_sq, gain_mean, probes)
 
+    if agent_blocks is not None:
+        nb, blk, bpad = ota.blocked_layout(n_local, agent_blocks)
+    want_norms = telemetry is not None and (
+        telemetry.grad_norms or telemetry.dispersion)
+
+    def local_round_streamed(theta, agent_keys, lane_stacks, key_chan):
+        # agent_keys/lane_stacks are this shard's (n_local,)-leading slices
+        # of the globally padded stacks; rows whose global agent index is
+        # >= n_agents are masked phantoms.
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        _, valid_local = ota._sharded_stream_meta(
+            (axis_name,), n_local, cfg.n_agents)
+        if ota_cfg is not None:
+            key_h, key_n = jax.random.split(key_chan)
+            h, valid_local = ota.sharded_stream_gains(
+                ota_cfg, key_h, (axis_name,), n_local, cfg.n_agents)
+
+        vp = jnp.concatenate([valid_local, jnp.zeros((bpad,), bool)]) \
+            if bpad else valid_local
+        xs = {
+            "keys": ota.block_view(
+                ota.pad_agent_axis(agent_keys, bpad), nb, blk),
+            "stacks": ota.block_view(
+                ota.pad_agent_axis(lane_stacks, bpad), nb, blk),
+            "valid": vp.reshape(nb, blk),
+        }
+        if ota_cfg is not None:
+            hp = jnp.concatenate([h, jnp.zeros((bpad,), h.dtype)]) \
+                if bpad else h
+            xs["gains"] = hp.reshape(nb, blk)
+
+        def block_body(carry, x):
+            grads_b, trajs_b = jax.vmap(agent_grad)(x["keys"], x["stacks"])
+            gsum = ota.stream_fold_block(carry[0], grads_b, None, x["valid"])
+            ys = {"returns": discounted_return(trajs_b.losses, cfg.gamma)}
+            if want_norms:
+                ys["norms_sq"] = sum(
+                    _probes._leaf_norms(g, blk)
+                    for g in jax.tree.leaves(grads_b))
+            if ota_cfg is None:
+                return (gsum,), ys
+            v = ota.stream_fold_block(carry[1], grads_b, x["gains"],
+                                      x["valid"])
+            return (gsum, v), ys
+
+        carry0 = (jax.tree.map(jnp.zeros_like, theta),)
+        if ota_cfg is not None:
+            carry0 += (jax.tree.map(jnp.zeros_like, theta),)
+        carry, ys = jax.lax.scan(block_body, carry0, xs)
+
+        mean_grad = jax.tree.map(
+            lambda s: jax.lax.psum(s, axis_name) / cfg.n_agents, carry[0])
+        v_global = None
+        if ota_cfg is None:
+            update = mean_grad
+            gain_mean = jnp.ones(())
+        else:
+            v_global = jax.tree.map(
+                lambda s: jax.lax.psum(s, axis_name), carry[1])
+            update = ota.stream_finalize(ota_cfg, key_n, v_global,
+                                         cfg.n_agents)
+            gain_mean = jax.lax.psum(jnp.sum(h), axis_name) / cfg.n_agents
+        theta_next = jax.tree.map(
+            lambda p, u: p - cfg.alpha * u, theta, update)
+
+        # metrics: restore absolute local order, mask phantoms, psum
+        returns = ys["returns"].reshape(
+            (nb * blk,) + ys["returns"].shape[2:])[:n_local]
+        r_local = -jnp.sum(jnp.where(valid_local[:, None], returns, 0.0))
+        reward = jax.lax.psum(r_local, axis_name) / (cfg.n_agents * cfg.batch_m)
+        grad_sq = tree_global_norm_sq(mean_grad)
+        if telemetry is None:
+            return theta_next, (reward, grad_sq, gain_mean)
+
+        norms_sq = ys["norms_sq"].reshape(-1)[:n_local] if want_norms \
+            else None
+        probes = _probes.sharded_streamed_round_probes(
+            telemetry, v=v_global, local_norms_sq=norms_sq,
+            valid_local=valid_local, ota_cfg=ota_cfg, n_agents=cfg.n_agents,
+            axis_name=axis_name,
+            param_dim=sum(int(p.size) for p in jax.tree.leaves(theta)),
+            gain_mean=gain_mean,
+            update_norm=jnp.sqrt(tree_global_norm_sq(update)))
+        return theta_next, (reward, grad_sq, gain_mean, probes)
+
     def round_fn(theta: PyTree, key: jax.Array):
         key_samp, key_chan = jax.random.split(key)
         agent_keys = jax.random.split(key_samp, cfg.n_agents)
         lane_stacks = dict(env.params) if hetero else {}
+        if agent_blocks is not None and pad_total:
+            agent_keys = ota.pad_agent_axis(agent_keys, pad_total)
+            lane_stacks = ota.pad_agent_axis(lane_stacks, pad_total)
         stack_specs = jax.tree.map(lambda _: P(axis_name), lane_stacks)
         metric_specs = (P(), P(), P())
         if telemetry is not None:
             metric_specs += (RoundTelemetry(P(), P(), P(), P(), P()),)
+        body = local_round_streamed if agent_blocks is not None \
+            else local_round
         return shard_map(
-            local_round, mesh=mesh,
+            body, mesh=mesh,
             in_specs=(P(), P(axis_name), stack_specs, P()),
             out_specs=(P(), metric_specs),
             check_rep=False,
@@ -279,6 +527,7 @@ def run(
     agent_axis: str = "agents",
     ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
+    agent_blocks: Optional[int] = None,
 ):
     """Run K rounds; returns (theta_K, History).
 
@@ -288,12 +537,16 @@ def run(
     ``repro.core.distribute.agent_mesh_for`` to build one.  ``ota_backend``
     routes the uplink ("xla" | "pallas" | "auto").  ``telemetry`` (active
     probes) fills ``History.telemetry`` with ``(K,)``-leaved round probes.
+    ``agent_blocks`` streams the agent axis in blocked-scan chunks of that
+    many agents — O(agent_blocks × d) peak memory, history bitwise-invariant
+    to the block size (see :func:`make_round_fn`).
     """
     key_init, key_scan = jax.random.split(key)
     theta = policy.init(key_init) if theta0 is None else theta0
     round_fn = make_round_fn(env, policy, cfg, ota,
                              agent_mesh=agent_mesh, agent_axis=agent_axis,
-                             ota_backend=ota_backend, telemetry=telemetry)
+                             ota_backend=ota_backend, telemetry=telemetry,
+                             agent_blocks=agent_blocks)
 
     def body(carry, key_k):
         theta = carry
@@ -324,20 +577,30 @@ def run(
 _CACHE_SIZE = 64
 
 
+# NOTE: the cache keys must include EVERY program-shaping argument of
+# `run` — a key that omits one silently returns a stale compiled program
+# for the other value.  Keep these signatures in lockstep with `run`.
+
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _compiled_run(env, policy, cfg: FedPGConfig, ota_cfg, backend: str,
-                  telemetry=None):
+                  telemetry=None, agent_mesh=None, agent_axis: str = "agents",
+                  agent_blocks=None):
     return jax.jit(
         lambda k: run(env, policy, cfg, k, ota=ota_cfg, ota_backend=backend,
-                      telemetry=telemetry))
+                      telemetry=telemetry, agent_mesh=agent_mesh,
+                      agent_axis=agent_axis, agent_blocks=agent_blocks))
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota_cfg,
-                          n_runs: int, backend: str, telemetry=None):
+                          n_runs: int, backend: str, telemetry=None,
+                          agent_mesh=None, agent_axis: str = "agents",
+                          agent_blocks=None):
     return jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota_cfg,
-                      ota_backend=backend, telemetry=telemetry)[1]))
+                      ota_backend=backend, telemetry=telemetry,
+                      agent_mesh=agent_mesh, agent_axis=agent_axis,
+                      agent_blocks=agent_blocks)[1]))
 
 
 # every compiled-program cache in the package; other modules (e.g.
@@ -366,21 +629,26 @@ def _hashable(*objs) -> bool:
 
 def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None,
             ota_backend: str = "auto",
-            telemetry: Optional[TelemetryConfig] = None):
+            telemetry: Optional[TelemetryConfig] = None,
+            agent_mesh=None, agent_axis: str = "agents",
+            agent_blocks: Optional[int] = None):
     """jit-compiled entry point (env/policy/cfgs are closure constants).
 
     Repeated calls with the same ``(env, policy, cfg, ota, ota_backend,
-    telemetry)`` reuse the compiled program (``theta0`` is a pytree and
-    cannot key a cache, so passing one compiles fresh).  Caching needs
-    every argument hashable: envs holding jax arrays (e.g. ``TabularMDP``)
-    take the uncached path.
+    telemetry, agent_mesh, agent_axis, agent_blocks)`` reuse the compiled
+    program (``theta0`` is a pytree and cannot key a cache, so passing one
+    compiles fresh).  Caching needs every argument hashable: envs holding
+    jax arrays (e.g. ``TabularMDP``) take the uncached path.
     """
     telemetry = _active_telemetry(telemetry)
-    if theta0 is None and _hashable(env, policy, cfg, ota, telemetry):
-        return _compiled_run(env, policy, cfg, ota, ota_backend,
-                             telemetry)(key)
+    if theta0 is None and _hashable(env, policy, cfg, ota, telemetry,
+                                    agent_mesh, agent_axis, agent_blocks):
+        return _compiled_run(env, policy, cfg, ota, ota_backend, telemetry,
+                             agent_mesh, agent_axis, agent_blocks)(key)
     fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0,
-                               ota_backend=ota_backend, telemetry=telemetry))
+                               ota_backend=ota_backend, telemetry=telemetry,
+                               agent_mesh=agent_mesh, agent_axis=agent_axis,
+                               agent_blocks=agent_blocks))
     return fn(key)
 
 
@@ -393,20 +661,27 @@ def monte_carlo(
     env, policy, cfg: FedPGConfig, key: jax.Array, n_runs: int, *, ota=None,
     ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
+    agent_mesh=None, agent_axis: str = "agents",
+    agent_blocks: Optional[int] = None,
 ):
     """n_runs independent repetitions (the paper uses 20): vmapped.
 
     Repeated calls with the same ``(env, policy, cfg, ota, n_runs,
-    telemetry)`` reuse the compiled program; only the PRNG keys change
-    between calls.  Caching needs every argument hashable: envs holding
-    jax arrays (e.g. ``TabularMDP``) take the uncached path.
+    ota_backend, telemetry, agent_mesh, agent_axis, agent_blocks)`` reuse
+    the compiled program; only the PRNG keys change between calls.  Caching
+    needs every argument hashable: envs holding jax arrays (e.g.
+    ``TabularMDP``) take the uncached path.
     """
     telemetry = _active_telemetry(telemetry)
     keys = jax.random.split(key, n_runs)
-    if _hashable(env, policy, cfg, ota, telemetry):
+    if _hashable(env, policy, cfg, ota, telemetry, agent_mesh, agent_axis,
+                 agent_blocks):
         return _compiled_monte_carlo(env, policy, cfg, ota, n_runs,
-                                     ota_backend, telemetry)(keys)
+                                     ota_backend, telemetry, agent_mesh,
+                                     agent_axis, agent_blocks)(keys)
     fn = jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota,
-                      ota_backend=ota_backend, telemetry=telemetry)[1]))
+                      ota_backend=ota_backend, telemetry=telemetry,
+                      agent_mesh=agent_mesh, agent_axis=agent_axis,
+                      agent_blocks=agent_blocks)[1]))
     return fn(keys)

@@ -230,6 +230,7 @@ def aggregate(
     local_stack: bool = False,
     gains: Optional[jax.Array] = None,
     spec: Optional[AggregateSpec] = None,
+    agent_blocks: Optional[int] = None,
 ) -> Tuple[PyTree, jax.Array]:
     """OTA-aggregate ``grads`` under ``cfg``; returns ``(u_k, h)``.
 
@@ -243,19 +244,47 @@ def aggregate(
     see :class:`AggregateSpec`.  ``gains`` overrides the channel draw
     (stacked form only, for equivalence tests).
 
+    ``agent_blocks`` selects the *streaming* blocked-scan evaluation of the
+    agent sum: the agent axis is consumed in ``lax.scan`` chunks of that
+    many agents, each chunk folded into the running channel superposition
+    by a strict sequential per-agent fold, with one AWGN draw + debias at
+    the end.  The PRNG streams (gain draw, noise key / counter seed) are
+    identical to the unblocked form, and the result is bitwise-invariant to
+    the choice of block size — any partition of the agent axis, including a
+    non-dividing one (the tail block is masked phantom agents), produces
+    the identical update.  Relative to ``agent_blocks=None`` the only
+    difference is the floating-point association of the cross-agent sum
+    (XLA's batched reduce vs. the sequential fold), a last-mantissa-bit
+    reassociation.  Needs an agent stack: the ``stacked`` and
+    ``axis_stacked`` forms (in the latter, rows whose global agent index is
+    ``>= n_agents`` are treated as phantom padding).  See
+    ``fedpg.make_round_fn(agent_blocks=...)`` for the form that actually
+    *produces* the gradients blockwise, which is where the O(B×d) peak
+    memory comes from.
+
     ``h`` is the sampled gain realisation: shape ``(N,)`` for the stacked
-    form, the local shard's gains for the axis forms, ``1.0`` when exact.
+    form, the local shard's gains for the axis forms (phantom entries
+    zeroed under ``agent_blocks`` padding), ``1.0`` when exact.
     """
     sp = spec if spec is not None else _make_spec(cfg, axis, local_stack,
                                                   backend)
     if sp.form != "stacked" and axis is None:
         raise ValueError(f"form {sp.form!r} needs an axis-name tuple")
+    if agent_blocks is not None and sp.form == "axis":
+        raise ValueError(
+            "agent_blocks streams an agent *stack*; the one-agent-per-shard "
+            "'axis' form has nothing to block (use local_stack=True)")
 
     if sp.exact:
         if sp.form == "stacked":
+            if agent_blocks is not None:
+                return _exact_mean_streamed(grads, agent_blocks), jnp.ones(())
             return _exact_mean(grads), jnp.ones(())
         if sp.form == "axis":
             return jax.lax.pmean(grads, tuple(axis)), jnp.ones(())
+        if agent_blocks is not None:
+            return _exact_mean_axis_stacked_streamed(
+                grads, tuple(axis), n_agents, agent_blocks), jnp.ones(())
         return _exact_mean_axis_stacked(grads, tuple(axis), n_agents), \
             jnp.ones(())
 
@@ -266,12 +295,19 @@ def aggregate(
 
     be = sp.resolved_backend()
     if sp.form == "stacked":
+        if agent_blocks is not None:
+            return _aggregate_stacked_streamed(
+                cfg, key, grads, agent_blocks, gains=gains, backend=be)
         if be == "pallas":
             return _aggregate_stacked_pallas(cfg, key, grads, gains=gains)
         return _aggregate_stacked_xla(cfg, key, grads, gains=gains)
     if sp.form == "axis":
         u, h = _psum_axis(cfg, key, grads, tuple(axis), n_agents=n_agents)
         return u, h
+    if agent_blocks is not None:
+        return _psum_axis_stacked_streamed(cfg, key, grads, tuple(axis),
+                                           n_agents=n_agents,
+                                           agent_blocks=agent_blocks)
     return _psum_axis_stacked(cfg, key, grads, tuple(axis),
                               n_agents=n_agents)
 
@@ -285,6 +321,7 @@ def aggregate_apply(
     alpha: Scalar,
     backend: str = "auto",
     gains: Optional[jax.Array] = None,
+    agent_blocks: Optional[int] = None,
 ) -> Tuple[PyTree, jax.Array]:
     """Aggregate + server SGD step: ``theta' = theta - alpha * u_k``.
 
@@ -292,11 +329,19 @@ def aggregate_apply(
     backend the whole chain — gain matvec, AWGN, debias, parameter update —
     is ONE fused kernel pass (``ota_fused.fused_aggregate_sgd``); on xla it
     is the bit-exact historical two-step (aggregate, then tree-mapped
-    update).  Returns ``(theta', h)``.
+    update).  ``agent_blocks`` streams the agent axis in blocked-scan
+    chunks (see :func:`aggregate`); on pallas the final noise + debias +
+    SGD tail then still runs as one fused kernel pass over the accumulated
+    superposition.  Returns ``(theta', h)``.
     """
     sp = _make_spec(cfg, None, False, backend)
+    if agent_blocks is not None and not sp.exact \
+            and sp.resolved_backend() == "pallas":
+        return _aggregate_apply_streamed_pallas(
+            cfg, key, grads, params, alpha, agent_blocks, gains=gains)
     if sp.exact or sp.resolved_backend() == "xla":
         u, h = aggregate(grads, cfg, key=key, gains=gains,
+                         agent_blocks=agent_blocks,
                          spec=replace(sp, backend="xla"))
         return jax.tree.map(lambda p, x: p - alpha * x, params, u), h
     return _aggregate_apply_pallas(cfg, key, grads, params, alpha,
@@ -305,7 +350,7 @@ def aggregate_apply(
 
 def uplink_jaxpr(cfg: Optional[OTAConfig], *, n_agents: int = 4,
                  dim: int = 8, apply: bool = False, alpha: Scalar = 1e-3,
-                 backend: str = "xla"):
+                 backend: str = "xla", agent_blocks: Optional[int] = None):
     """Trace the stacked uplink for structural inspection.
 
     Returns the ClosedJaxpr of ``aggregate`` (or ``aggregate_apply`` with
@@ -314,7 +359,9 @@ def uplink_jaxpr(cfg: Optional[OTAConfig], *, n_agents: int = 4,
     checker walks: the uplink may narrow floats *only* through the
     sanctioned ``OTAConfig.wire_dtype`` bf16 hop, so any other
     ``convert_element_type`` to a smaller float in this jaxpr is a
-    precision bug.
+    precision bug.  ``agent_blocks`` traces the streaming blocked-scan
+    form instead (the hook the stream-contract checker walks: the scan
+    carry must stay O(block × d), independent of ``n_agents``).
     """
     grads = jnp.zeros((n_agents, dim), jnp.float32)
     key = jax.random.key(0)
@@ -322,10 +369,12 @@ def uplink_jaxpr(cfg: Optional[OTAConfig], *, n_agents: int = 4,
         params = jnp.zeros((dim,), jnp.float32)
         return jax.make_jaxpr(
             lambda g, p, k: aggregate_apply(g, cfg, p, key=k, alpha=alpha,
-                                            backend=backend)
+                                            backend=backend,
+                                            agent_blocks=agent_blocks)
         )(grads, params, key)
     return jax.make_jaxpr(
-        lambda g, k: aggregate(g, cfg, key=k, backend=backend)
+        lambda g, k: aggregate(g, cfg, key=k, backend=backend,
+                               agent_blocks=agent_blocks)
     )(grads, key)
 
 
@@ -562,6 +611,369 @@ def _aggregate_apply_pallas(
         wire_dtype=_wire_dtype(cfg),
     )
     return punflatten(p_next), h
+
+
+# ---------------------------------------------------------------------------
+# Streaming (blocked-scan) evaluation of the agent sum: agent_blocks.
+#
+# The agent axis is consumed in scan chunks of `block` agents; each chunk is
+# folded into the running channel superposition by a STRICT sequential
+# per-agent fold.  The fold's association is therefore independent of where
+# the block boundaries fall — any partition of the agent axis (including a
+# masked phantom tail for non-dividing counts) yields a bitwise-identical
+# sum, mirroring the `block_rows` invariance of the fused kernel.  Gains
+# and AWGN come from the exact same PRNG streams as the unblocked forms;
+# only the cross-agent summation association differs from XLA's batched
+# reduce (a last-mantissa-bit reassociation, documented in README).
+# ---------------------------------------------------------------------------
+
+def blocked_layout(n_agents: int, agent_blocks: int) -> Tuple[int, int, int]:
+    """Resolve a block partition: ``(n_blocks, block, pad)``.
+
+    ``pad`` phantom agents fill the tail block when ``agent_blocks`` does
+    not divide ``n_agents``; their contributions are masked to exact zeros,
+    so the padded fold is bitwise-identical to the unpadded one.
+
+    The block is capped at ``ceil(n_agents / 2)`` so the scan always runs
+    at least two steps: XLA inlines a trip-count-1 loop, which changes how
+    the block body fuses and would make ``agent_blocks >= n_agents`` a
+    bitwise outlier among block sizes.  Capping only shrinks the block
+    (peak memory stays within the requested O(agent_blocks × d)) and the
+    strict sequential fold is invariant to where the boundaries fall, so
+    every finite ``agent_blocks`` lands on the same history.
+    """
+    if agent_blocks < 1:
+        raise ValueError(f"agent_blocks must be >= 1, got {agent_blocks}")
+    block = min(int(agent_blocks), max(1, -(-n_agents // 2)))
+    n_blocks = -(-n_agents // block)
+    return n_blocks, block, n_blocks * block - n_agents
+
+
+def pad_agent_axis(tree: PyTree, pad: int) -> PyTree:
+    """Append ``pad`` phantom rows to every leading-axis leaf (row-0 copies;
+    the values never contribute — every streamed consumer masks them).
+    Works on PRNG key arrays too (gather + concatenate only)."""
+    if pad == 0:
+        return tree
+
+    def _pad(a):
+        filler = a[jnp.zeros((pad,), jnp.int32)]
+        return jnp.concatenate([a, filler], axis=0)
+
+    return jax.tree.map(_pad, tree)
+
+
+def block_view(tree: PyTree, n_blocks: int, block: int) -> PyTree:
+    """Reshape padded leading-axis leaves to ``(n_blocks, block, ...)`` —
+    the xs layout the blocked scan consumes (absolute agent order is
+    preserved: block b holds agents ``[b*block, (b+1)*block)``)."""
+    return jax.tree.map(
+        lambda a: a.reshape((n_blocks, block) + a.shape[1:]), tree)
+
+
+def block_valid_mask(n_agents: int, n_blocks: int, block: int) -> jax.Array:
+    """(n_blocks, block) bool — False on phantom (padding) rows."""
+    return (jnp.arange(n_blocks * block) < n_agents).reshape(n_blocks, block)
+
+
+def stream_fold_block(
+    acc: PyTree,
+    grads_block: PyTree,
+    gains_block: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None,
+    wire_dtype=None,
+) -> PyTree:
+    """Fold one agent block into the running sum, strictly sequentially.
+
+    ``acc + h_0 g_0 + h_1 g_1 + ...`` as an explicit left fold (a
+    ``fori_loop`` of per-agent adds), so the association never depends on
+    the block size.  ``gains_block=None`` folds the unweighted gradients
+    (the exact-uplink mean numerator).  ``valid`` masks phantom rows to
+    exact zeros — IEEE-safe: the running value can never be ``-0.0`` (a sum
+    starting from ``+0.0`` cannot produce it), so ``+ 0.0`` is a bitwise
+    no-op and padding never perturbs the fold.  ``wire_dtype`` applies the
+    pallas wire-format quantisation per agent row (cast down, compute in
+    float32), matching the fused kernel's per-row math.
+    """
+    leaves = jax.tree.leaves(grads_block)
+    block = leaves[0].shape[0]
+
+    def step(i, acc):
+        def add_row(a, g):
+            row = g[i]
+            if wire_dtype is not None:
+                row = row.astype(wire_dtype).astype(jnp.float32)
+            if gains_block is not None:
+                row = gains_block[i].astype(row.dtype) * row
+            if valid is not None:
+                row = jnp.where(valid[i], row, jnp.zeros_like(row))
+            return a + row.astype(a.dtype)
+        return jax.tree.map(add_row, acc, grads_block)
+
+    return jax.lax.fori_loop(0, block, step, acc)
+
+
+def _stream_zero(grads_stacked: PyTree, as_f32: bool = False) -> PyTree:
+    dt = (lambda a: jnp.float32) if as_f32 else (lambda a: a.dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros(a.shape[1:], dt(a)), grads_stacked)
+
+
+def _stream_superpose(
+    grads_stacked: PyTree,
+    gains: Optional[jax.Array],
+    agent_blocks: int,
+    *,
+    wire_dtype=None,
+    as_f32: bool = False,
+) -> PyTree:
+    """scan-of-folds over an already-materialised agent stack; returns the
+    running superposition ``sum_i h_i g_i`` (or ``sum_i g_i``)."""
+    n = jax.tree.leaves(grads_stacked)[0].shape[0]
+    n_blocks, block, pad = blocked_layout(n, agent_blocks)
+    gp = block_view(pad_agent_axis(grads_stacked, pad), n_blocks, block)
+    valid = block_valid_mask(n, n_blocks, block)
+    xs = (gp, valid)
+    if gains is not None:
+        hp = jnp.concatenate([gains, jnp.zeros((pad,), gains.dtype)]) \
+            if pad else gains
+        xs = (gp, valid, hp.reshape(n_blocks, block))
+
+    def body(acc, x):
+        gb, vb = x[0], x[1]
+        hb = x[2] if gains is not None else None
+        if as_f32:
+            gb = jax.tree.map(lambda a: a.astype(jnp.float32), gb)
+        return stream_fold_block(acc, gb, hb, vb, wire_dtype=wire_dtype), None
+
+    v, _ = jax.lax.scan(body, _stream_zero(grads_stacked, as_f32), xs)
+    return v
+
+
+def stream_finalize(
+    cfg: OTAConfig,
+    key_n: jax.Array,
+    v: PyTree,
+    n_agents: int,
+    *,
+    backend: str = "xla",
+) -> PyTree:
+    """Server tail over a streamed superposition: ONE AWGN draw + the
+    debias normalisation.  On xla this is the shared `_server_epilogue`
+    (the noise tensor is bitwise-identical to the unblocked form's — same
+    ``key_n``, same shapes); on pallas it is one fused kernel pass over the
+    flattened ``v`` with the counter PRNG (noise indexed by absolute flat
+    position, so it too is invariant to the agent blocking)."""
+    if backend == "pallas":
+        from repro.kernels import ota_fused
+
+        flat, unflatten = _flatten_params(v)
+        u = ota_fused.fused_server_pass(
+            flat,
+            sigma=cfg.noise_sigma,
+            scale=_server_scale(cfg, n_agents, n_agents),
+            seed=_kernel_seed(key_n),
+            with_noise=_noise_enabled(cfg.noise_sigma),
+        )
+        return unflatten(u)
+    return _server_epilogue(cfg, key_n, v, n_agents, n_agents)
+
+
+def stream_finalize_apply(
+    cfg: OTAConfig,
+    key_n: jax.Array,
+    v: PyTree,
+    params: PyTree,
+    alpha: Scalar,
+    n_agents: int,
+    *,
+    backend: str = "xla",
+) -> PyTree:
+    """`stream_finalize` fused with the server SGD step
+    ``theta' = theta - alpha * u`` (one kernel pass on pallas)."""
+    if backend == "pallas":
+        from repro.kernels import ota_fused
+
+        flat, _ = _flatten_params(v)
+        pflat, punflatten = _flatten_params(params)
+        p_next = ota_fused.fused_server_pass(
+            flat,
+            sigma=cfg.noise_sigma,
+            scale=_server_scale(cfg, n_agents, n_agents),
+            seed=_kernel_seed(key_n),
+            with_noise=_noise_enabled(cfg.noise_sigma),
+            alpha=alpha,
+            params=pflat,
+        )
+        return punflatten(p_next)
+    u = _server_epilogue(cfg, key_n, v, n_agents, n_agents)
+    return jax.tree.map(lambda p, x: p - alpha * x, params, u)
+
+
+def _aggregate_stacked_streamed(
+    cfg: OTAConfig,
+    key: jax.Array,
+    grads_stacked: PyTree,
+    agent_blocks: int,
+    *,
+    gains: Optional[jax.Array] = None,
+    backend: str = "xla",
+) -> Tuple[PyTree, jax.Array]:
+    """The stacked form evaluated as a blocked scan.  Same key split, same
+    full-N gain draw, same noise stream as the unblocked stacked form of
+    the matching backend — only the agent-sum association differs."""
+    n = jax.tree.leaves(grads_stacked)[0].shape[0]
+    key_h, key_n = jax.random.split(key)
+    h = sample_gains(cfg, key_h, n) if gains is None else gains
+    pallas = backend == "pallas"
+    v = _stream_superpose(
+        grads_stacked, h.astype(jnp.float32) if pallas else h, agent_blocks,
+        wire_dtype=_wire_dtype(cfg) if pallas else None, as_f32=pallas)
+    if pallas:
+        # match the kernel's output contract: float32 update leaves cast
+        # back to the native parameter dtypes by the unflatten
+        u = stream_finalize(cfg, key_n, v, n, backend="pallas")
+        u = jax.tree.map(lambda x, g: x.astype(g.dtype), u,
+                         jax.tree.map(lambda a: a[0], grads_stacked))
+        return u, h
+    return stream_finalize(cfg, key_n, v, n), h
+
+
+def _aggregate_apply_streamed_pallas(
+    cfg: OTAConfig,
+    key: jax.Array,
+    grads_stacked: PyTree,
+    params: PyTree,
+    alpha: Scalar,
+    agent_blocks: int,
+    *,
+    gains: Optional[jax.Array] = None,
+) -> Tuple[PyTree, jax.Array]:
+    n = jax.tree.leaves(grads_stacked)[0].shape[0]
+    key_h, key_n = jax.random.split(key)
+    h = sample_gains(cfg, key_h, n) if gains is None else gains
+    v = _stream_superpose(grads_stacked, h.astype(jnp.float32), agent_blocks,
+                          wire_dtype=_wire_dtype(cfg), as_f32=True)
+    return stream_finalize_apply(cfg, key_n, v, params, alpha, n,
+                                 backend="pallas"), h
+
+
+def _exact_mean_streamed(grads_stacked: PyTree, agent_blocks: int) -> PyTree:
+    """Algorithm-1 mean as a blocked fold: ``(fold_i g_i) / N``."""
+    n = jax.tree.leaves(grads_stacked)[0].shape[0]
+    v = _stream_superpose(grads_stacked, None, agent_blocks)
+    return jax.tree.map(lambda s: s / n, v)
+
+
+def _exact_mean_axis_stacked_streamed(
+    local_grads: PyTree, axis_names: Tuple[str, ...],
+    n_agents: Optional[int], agent_blocks: int,
+) -> PyTree:
+    """Exact global mean with shard-local blocked folds (psum of local
+    folds / N).  Rows whose global agent index is >= ``n_agents`` are
+    phantom padding and fold exact zeros."""
+    n_local = jax.tree.leaves(local_grads)[0].shape[0]
+    n_total, valid_local = _sharded_stream_meta(axis_names, n_local, n_agents)
+    v_local = _stream_superpose_masked(local_grads, None, agent_blocks,
+                                       valid_local)
+    return jax.tree.map(
+        lambda s: jax.lax.psum(s, axis_names) / n_total, v_local)
+
+
+def _sharded_stream_meta(axis_names, n_local: int,
+                         n_agents: Optional[int]):
+    """(true agent count, per-local-row validity) for a possibly padded
+    shard-local stack: row j is global agent ``shard_index * n_local + j``,
+    valid while that index is < n_agents."""
+    idx, stride = _flat_axis_index(axis_names)
+    if n_agents is None:
+        return stride * n_local, jnp.ones((n_local,), bool)
+    global_idx = idx * n_local + jnp.arange(n_local, dtype=jnp.int32)
+    return n_agents, global_idx < n_agents
+
+
+def _stream_superpose_masked(
+    local_grads: PyTree,
+    gains: Optional[jax.Array],
+    agent_blocks: int,
+    valid_local: jax.Array,
+) -> PyTree:
+    """`_stream_superpose` over a shard-local stack whose rows carry their
+    own validity (shard-level phantom padding composed with the tail-block
+    padding of the scan itself)."""
+    n_local = jax.tree.leaves(local_grads)[0].shape[0]
+    n_blocks, block, pad = blocked_layout(n_local, agent_blocks)
+    gp = block_view(pad_agent_axis(local_grads, pad), n_blocks, block)
+    vp = jnp.concatenate([valid_local, jnp.zeros((pad,), bool)]) \
+        if pad else valid_local
+    valid = vp.reshape(n_blocks, block)
+    xs = (gp, valid)
+    if gains is not None:
+        hp = jnp.concatenate([gains, jnp.zeros((pad,), gains.dtype)]) \
+            if pad else gains
+        xs = (gp, valid, hp.reshape(n_blocks, block))
+
+    def body(acc, x):
+        gb, vb = x[0], x[1]
+        hb = x[2] if gains is not None else None
+        return stream_fold_block(acc, gb, hb, vb), None
+
+    v, _ = jax.lax.scan(body, _stream_zero(local_grads), xs)
+    return v
+
+
+def sharded_stream_gains(
+    cfg: OTAConfig,
+    key_h: jax.Array,
+    axis_names: Tuple[str, ...],
+    n_local: int,
+    n_agents: Optional[int],
+) -> Tuple[jax.Array, jax.Array]:
+    """This shard's ``(h_local, valid_local)`` for a streamed axis-stacked
+    uplink: the same global-agent-index ``fold_in`` gain stream as the
+    unblocked `_psum_axis_stacked` (so gains are invariant to both the mesh
+    layout and the blocking), with phantom rows — global index >=
+    ``n_agents`` under padding — zeroed so a ``psum(sum(h)) / N`` gain mean
+    stays correct."""
+    n_total, valid_local = _sharded_stream_meta(axis_names, n_local, n_agents)
+    idx, _ = _flat_axis_index(axis_names)
+    global_idx = idx * n_local + jnp.arange(n_local, dtype=jnp.int32)
+
+    def gain_for(j):
+        c = cfg.channel.sample(jax.random.fold_in(key_h, j), ())
+        if cfg.power_control is not None:
+            c = c * cfg.power_control.apply_indexed(c, j, n_total)
+        return c
+
+    h = jax.vmap(gain_for)(global_idx)
+    return jnp.where(valid_local, h, jnp.zeros_like(h)), valid_local
+
+
+def _psum_axis_stacked_streamed(
+    cfg: OTAConfig,
+    key: jax.Array,
+    local_grads: PyTree,
+    axis_names: Tuple[str, ...],
+    *,
+    n_agents: Optional[int] = None,
+    agent_blocks: int,
+) -> Tuple[PyTree, jax.Array]:
+    """The axis-stacked form with shard-local blocked folds.
+
+    Gains come from :func:`sharded_stream_gains` (the unblocked form's
+    stream); phantom rows fold exact zeros.  Local folds are psummed once,
+    then the shared server epilogue runs with the TRUE agent count — the
+    reward/update normalisers never see the padding.
+    """
+    n_local = jax.tree.leaves(local_grads)[0].shape[0]
+    key_h, key_n = jax.random.split(key)
+    n_total, _ = _sharded_stream_meta(axis_names, n_local, n_agents)
+    h, valid_local = sharded_stream_gains(cfg, key_h, axis_names, n_local,
+                                          n_agents)
+    v_local = _stream_superpose_masked(local_grads, h, agent_blocks,
+                                       valid_local)
+    v = jax.tree.map(lambda s: jax.lax.psum(s, axis_names), v_local)
+    return _server_epilogue(cfg, key_n, v, n_total, n_agents), h
 
 
 # ---------------------------------------------------------------------------

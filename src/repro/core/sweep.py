@@ -125,6 +125,9 @@ class Scenario:
     estimator: str = "gpomdp"
     power_control: Optional[PowerPolicy] = None
     debias: bool = False
+    # streaming round form: lax.scan over agent blocks (structural — it
+    # changes the jaxpr, so it splits partitions; see fedpg.make_round_fn)
+    agent_blocks: Optional[int] = None
     env: Any = None
     policy: Any = None
     tag: str = ""  # free-form label carried into tables/CSV
@@ -191,7 +194,10 @@ class Scenario:
             "horizon": self.horizon, "gamma": self.gamma,
             "n_rounds": self.n_rounds, "estimator": self.estimator,
             "power_control": pc, "power_control_params": pc_params,
-            "debias": self.debias, "env": env_tag, "env_params": env_params,
+            "debias": self.debias,
+            "agent_blocks": "" if self.agent_blocks is None
+            else self.agent_blocks,
+            "env": env_tag, "env_params": env_params,
             "policy": pol, "m_h_eff": m_eff, "sigma_h2_eff": v_eff,
         }
 
@@ -300,11 +306,12 @@ def _structure_key(s: Scenario) -> Tuple:
         # exact uplink: the OTA-only axes don't reach the program — zero
         # them so equivalent exact scenarios share one partition/compile.
         return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
-                s.estimator, False, None, None, False) + _workload_key(s)
+                s.estimator, False, None, None, False,
+                s.agent_blocks) + _workload_key(s)
     pc = None if s.power_control is None else type(s.power_control).__name__
     return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
             s.estimator, s.debias, _channel_tag(s.channel), pc,
-            s.noise_sigma > 0.0) + _workload_key(s)
+            s.noise_sigma > 0.0, s.agent_blocks) + _workload_key(s)
 
 
 @dataclass
@@ -445,7 +452,8 @@ def _make_lane(env, policy, part: Partition,
                 ota = replace(ota, update_scale=packed["update_scale"])
         return jax.vmap(
             lambda k: fedpg.run(env_l, lane_policy, cfg, k, ota=ota,
-                                telemetry=telemetry)[1]
+                                telemetry=telemetry,
+                                agent_blocks=proto.agent_blocks)[1]
         )(keys)
 
     return lane

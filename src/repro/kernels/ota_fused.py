@@ -270,6 +270,42 @@ def fused_aggregate_sgd(
     return out.reshape(-1)[:n_params]
 
 
+def fused_server_pass(
+    v: jax.Array,              # (n_params,) f32 — accumulated superposition
+    *,
+    sigma=0.0,
+    scale=1.0,
+    seed=0,
+    with_noise: Optional[bool] = None,
+    alpha=None,                # with params: fuse the SGD step too
+    params: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The server tail of a *streamed* (``agent_blocks``) uplink as one
+    kernel pass: AWGN + debias/normalisation — and, when ``params`` (and
+    ``alpha``) are given, the SGD update — over an already-accumulated
+    superposition ``v = sum_i h_i g_i``.
+
+    Reuses the aggregation kernel's block grid with ``v`` as a single
+    unit-gain agent row and no wire-dtype hop (the blocked scan already
+    applied the wire quantisation per agent row; re-narrowing the running
+    sum would double-quantise).  The counter PRNG is keyed on the absolute
+    flat element index, so the noise is bitwise-identical to the one-shot
+    kernel's draw for the same seed — and invariant to the agent blocking.
+    """
+    flat = v.astype(jnp.float32).reshape(1, -1)
+    ones = jnp.ones((1,), jnp.float32)
+    if params is None:
+        return fused_aggregate(
+            flat, ones, sigma=sigma, scale=scale, seed=seed,
+            with_noise=with_noise, interpret=interpret)
+    if alpha is None:
+        raise ValueError("fused_server_pass with params needs alpha")
+    return fused_aggregate_sgd(
+        flat, ones, params, alpha=alpha, sigma=sigma, scale=scale,
+        seed=seed, with_noise=with_noise, interpret=interpret)
+
+
 def fused_aggregate_adam(
     grads: jax.Array,          # (n_agents, n_params)
     gains: jax.Array,          # (n_agents,)

@@ -50,7 +50,8 @@ def _ota():
 
 
 __all__ = ["RoundTelemetry", "TelemetryConfig", "sharded_round_probes",
-           "stacked_round_probes"]
+           "sharded_streamed_round_probes", "stacked_round_probes",
+           "streamed_round_probes"]
 
 
 @dataclass(frozen=True)
@@ -204,6 +205,107 @@ def sharded_round_probes(
             grad_post = update_norm.astype(jnp.float32)
         if config.dispersion:
             disp = jax.lax.pmax(jnp.max(local_norms), axis_name) / mean_norm
+    if config.moment_drift:
+        ref = _drift_reference(ota_cfg, n_agents)
+        drift = (gain_mean - ref).astype(jnp.float32)
+    return RoundTelemetry(snr=snr, grad_norm_pre=grad_pre,
+                          grad_norm_post=grad_post, moment_drift=drift,
+                          dispersion=disp)
+
+
+def streamed_round_probes(
+    config: TelemetryConfig,
+    *,
+    v: Optional[PyTree],
+    norms_sq: Optional[jax.Array],
+    ota_cfg: Optional[OTAConfig],
+    n_agents: int,
+    param_dim: int,
+    gain_mean: jax.Array,
+    update_norm: jax.Array,
+) -> RoundTelemetry:
+    """Probes for the blocked-scan (streamed) round form.
+
+    Everything derives from the round's *running accumulators* instead of a
+    materialised ``(N, d)`` gradient stack, so telemetry stays O(N) scalars
+    at any fleet size: ``v`` is the accumulated channel superposition
+    ``sum_i h_i g_i`` (None for exact uplinks — the SNR probe is ``inf``
+    there anyway), ``norms_sq`` the ``(N,)`` per-agent squared gradient
+    norms the scan emitted (None when both norm probes are off).  Values
+    match :func:`stacked_round_probes` — bitwise for the norm statistics
+    (identical per-agent values, identical final reductions), to
+    reassociation tolerance for the SNR signal power.
+    """
+    snr = grad_pre = grad_post = drift = disp = _nan()
+    noisy = ota_cfg is not None and _ota()._noise_enabled(ota_cfg.noise_sigma)
+    if config.snr:
+        if not noisy:
+            snr = jnp.full((), jnp.inf, jnp.float32)
+        else:
+            sig = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                      for leaf in jax.tree.leaves(v))
+            snr = _snr_from(sig, param_dim, ota_cfg)
+    if config.grad_norms or config.dispersion:
+        norms = jnp.sqrt(norms_sq)
+        if config.grad_norms:
+            grad_pre = jnp.mean(norms)
+            grad_post = update_norm.astype(jnp.float32)
+        if config.dispersion:
+            disp = jnp.max(norms) / jnp.mean(norms)
+    if config.moment_drift:
+        ref = _drift_reference(ota_cfg, n_agents)
+        drift = (gain_mean - ref).astype(jnp.float32)
+    return RoundTelemetry(snr=snr, grad_norm_pre=grad_pre,
+                          grad_norm_post=grad_post, moment_drift=drift,
+                          dispersion=disp)
+
+
+def sharded_streamed_round_probes(
+    config: TelemetryConfig,
+    *,
+    v: Optional[PyTree],
+    local_norms_sq: Optional[jax.Array],
+    valid_local: jax.Array,
+    ota_cfg: Optional[OTAConfig],
+    n_agents: int,
+    axis_name: str,
+    param_dim: int,
+    gain_mean: jax.Array,
+    update_norm: jax.Array,
+) -> RoundTelemetry:
+    """Streamed probes inside the agent-mesh shard_map round.
+
+    ``v`` is already psummed (replicated) by the round body;
+    ``local_norms_sq`` carries this shard's ``(n_local,)`` per-agent squared
+    norms with phantom (padding) rows masked out via ``valid_local`` before
+    the psum/pmax reductions, so padded fleets report statistics over the
+    true ``n_agents`` only.
+
+    Block-invariance caveat: under shard_map the SPMD partitioner fuses the
+    per-agent norm reduction width-dependently, so the ``dispersion``
+    probe's max-norm can move by a last mantissa bit across ``agent_blocks``
+    choices (the summed ``grad_norm_pre`` over the *same* norms rounds
+    identically).  Every other emitted quantity is bitwise block-invariant.
+    """
+    snr = grad_pre = grad_post = drift = disp = _nan()
+    noisy = ota_cfg is not None and _ota()._noise_enabled(ota_cfg.noise_sigma)
+    if config.snr:
+        if not noisy:
+            snr = jnp.full((), jnp.inf, jnp.float32)
+        else:
+            sig = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                      for leaf in jax.tree.leaves(v))
+            snr = _snr_from(sig, param_dim, ota_cfg)
+    if config.grad_norms or config.dispersion:
+        norms = jnp.where(valid_local, jnp.sqrt(local_norms_sq), 0.0)
+        mean_norm = jax.lax.psum(jnp.sum(norms), axis_name) / n_agents
+        if config.grad_norms:
+            grad_pre = mean_norm
+            grad_post = update_norm.astype(jnp.float32)
+        if config.dispersion:
+            # phantom rows hold 0.0, which can never win the max: every
+            # shard owns at least one real agent (pad < n_local).
+            disp = jax.lax.pmax(jnp.max(norms), axis_name) / mean_norm
     if config.moment_drift:
         ref = _drift_reference(ota_cfg, n_agents)
         drift = (gain_mean - ref).astype(jnp.float32)

@@ -590,3 +590,26 @@ def test_collective_audit_passes_on_mesh():
     contracts.check_collectives(report)
     errors = [f for f in report.findings if f.severity == "error"]
     assert errors == [], "\n".join(f.render() for f in errors)
+
+def test_stream_contract_passes_real_streaming():
+    from repro.analyze import contracts
+
+    report = Report()
+    contracts.check_stream_contract(report)
+    assert report.findings == [], "\n".join(f.render() for f in report.findings)
+
+
+def test_stream_contract_flags_unblocked_layout_mutant(monkeypatch):
+    # collapse the blocked layout to one fleet-sized block: the rollout scan
+    # carry becomes (N, M, ...) and must differ between the two traced fleet
+    # sizes — exactly the "carry grows with N" regression the check exists for
+    from repro.analyze import contracts
+    from repro.core import ota as ota_mod
+
+    monkeypatch.setattr(ota_mod, "blocked_layout",
+                        lambda n, b: (1, int(n), 0))
+    report = Report()
+    contracts.check_stream_contract(report)
+    msgs = [f.message for f in report.findings if f.rule == "stream-contract"]
+    assert any("grows with the fleet" in m or "scales with the fleet" in m
+               for m in msgs), msgs

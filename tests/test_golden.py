@@ -35,6 +35,7 @@ from repro.core.power_control import TruncatedInversion, make_controlled_channel
 from repro.core.sweep import Scenario, sweep
 from repro.rl.envs import (
     CliffWalk, LQRTask, MultiLandmarkNav, WindyLandmarkNav, garnet, make_env,
+    make_heterogeneous_env,
 )
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
@@ -56,6 +57,10 @@ def _families():
         "cliffwalk": CliffWalk(width=4, height=3, slip=0.1),
         "lqr": LQRTask(process_sigma=0.1),
         "tabular": garnet(jax.random.key(0), 4, 2, branching=2),
+        # one lane per agent (SMALL n_agents=3): the heterogeneous-fleet
+        # golden the streamed (agent_blocks) equivalence suite pins against
+        "hetero": make_heterogeneous_env(
+            [WindyLandmarkNav(wind=w) for w in (0.0, 0.1, 0.2)]),
     }
 
 

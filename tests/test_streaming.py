@@ -1,0 +1,373 @@
+"""Blocked-scan streaming (``agent_blocks``) equivalence suite.
+
+The contract under test (see ``fedpg.make_round_fn`` / ``ota.aggregate``):
+
+* **Block invariance** — for any finite block size the streamed round is a
+  strict sequential left-fold over absolute agent indices, so the full
+  training history (rewards, grad_sq, gain_mean, telemetry, final theta)
+  is **bitwise identical** across every ``agent_blocks`` choice — on the
+  vmap form, the shard_map form (phantom-padded, non-dividing fleets
+  included), and the pallas uplink backend.
+* **vs. the stacked form** — the PRNG streams are identical
+  (``gain_mean`` compares bitwise); rewards/updates differ only at the
+  floating-point reassociation level (XLA fuses the blocked rollouts and
+  the cross-agent sum differently), pinned here at tight tolerance.
+* **Absolute indexing** — per-agent state (``HeterogeneousEnv`` lane
+  parameters, ``HeterogeneousBudget`` power budgets) follows the agent's
+  absolute index, not its position inside a block.
+* **Cache keys** — every program-shaping argument of ``fedpg.run`` keys
+  the compiled-callable caches; flipping one compiles a distinct program
+  instead of silently reusing a stale one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import event_triggered, fedpg, ota
+from repro.core.channel import FixedGainChannel, RayleighChannel
+from repro.core.ota import OTAConfig
+from repro.core.power_control import HeterogeneousBudget
+from repro.launch.mesh import make_agent_mesh
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+from repro.rl.envs import WindyLandmarkNav, make_heterogeneous_env
+from repro.telemetry.probes import TelemetryConfig
+
+N_DEV = jax.device_count()
+SMALL = dict(n_agents=7, batch_m=2, horizon=5, n_rounds=3)
+RAYLEIGH = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3, debias=True)
+
+# distinct blocked layouts (1, 2, 3, the ceil(N/2)=4 cap) plus an
+# over-asking block size that must hit the same capped layout as 4
+BLOCK_GRID = (1, 2, 3, 4, 100)
+
+
+@pytest.fixture(scope="module")
+def env_pol():
+    return LandmarkNav(), MLPPolicy()
+
+
+def _bitwise(a, b, what=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+def _close(a, b, what="", rtol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=1e-7, err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# block invariance + vs-stacked, vmap form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("uplink", ["exact", "rayleigh"])
+def test_block_invariance_vmap(env_pol, uplink, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ocfg = None if uplink == "exact" else RAYLEIGH
+    tel = TelemetryConfig() if uplink == "rayleigh" else None
+
+    ref = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, telemetry=tel,
+                        agent_blocks=BLOCK_GRID[0])
+    for b in BLOCK_GRID[1:]:
+        got = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, telemetry=tel,
+                            agent_blocks=b)
+        _bitwise(got, ref, f"agent_blocks={b} vs {BLOCK_GRID[0]}")
+
+
+@pytest.mark.parametrize("uplink", ["exact", "rayleigh"])
+def test_streamed_vs_stacked(env_pol, uplink, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ocfg = None if uplink == "exact" else RAYLEIGH
+
+    theta_n, hist_n = fedpg.run_jit(env, pol, cfg, key, ota=ocfg)
+    theta_b, hist_b = fedpg.run_jit(env, pol, cfg, key, ota=ocfg,
+                                    agent_blocks=3)
+    # identical PRNG streams: the gain draw compares bitwise
+    np.testing.assert_array_equal(np.asarray(hist_b.gain_mean),
+                                  np.asarray(hist_n.gain_mean))
+    # the rest differs only by the documented cross-agent reassociation
+    _close(hist_b, hist_n, "history streamed-vs-stacked")
+    _close(theta_b, theta_n, "theta streamed-vs-stacked")
+
+
+def test_pallas_backend_block_invariance(env_pol, key):
+    env, pol = env_pol
+    # interpret mode on CPU: keep the program tiny
+    cfg = fedpg.FedPGConfig(n_agents=5, batch_m=1, horizon=4, n_rounds=2)
+    ref = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                        ota_backend="pallas", agent_blocks=1)
+    for b in (2, 5):
+        got = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                            ota_backend="pallas", agent_blocks=b)
+        _bitwise(got, ref, f"pallas agent_blocks={b} vs 1")
+
+
+# ---------------------------------------------------------------------------
+# the sharded (shard_map) form: padding + block invariance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs >= 2 devices "
+                    "(REPRO_EMULATED_DEVICES=8)")
+def test_nondivisible_fleet_needs_blocks(env_pol, key):
+    env, pol = env_pol
+    mesh = make_agent_mesh(2)
+    cfg = fedpg.FedPGConfig(n_agents=5, batch_m=1, horizon=4, n_rounds=2)
+    with pytest.raises(ValueError, match="agent_blocks"):
+        fedpg.run(env, pol, cfg, key, ota=RAYLEIGH, agent_mesh=mesh)
+    # with agent_blocks the same fleet runs on a masked phantom-agent tail
+    theta, hist = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                                agent_mesh=mesh, agent_blocks=2)
+    assert np.isfinite(np.asarray(hist.rewards)).all()
+    assert np.isfinite(np.asarray(hist.gain_mean)).all()
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices "
+                    "(REPRO_EMULATED_DEVICES=8)")
+def test_padded_sharded_pins_unsharded(env_pol, key):
+    # the ISSUE's pin: N=10 on 4 shards (phantom-padded to 12) vs the
+    # unsharded stacked run.  FixedGain makes the channel draw trivially
+    # identical across the two gain-derivation schemes (batched split vs
+    # absolute-index fold_in); the AWGN key is shared, so gain_mean is
+    # bitwise and the d-dimensional metrics sit at psum-reassociation
+    # tolerance.
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=10, batch_m=2, horizon=5, n_rounds=3)
+    ocfg = OTAConfig(channel=FixedGainChannel(gain=1.5), noise_sigma=1e-3,
+                     debias=True)
+    mesh = make_agent_mesh(4)
+    theta_s, hist_s = fedpg.run_jit(env, pol, cfg, key, ota=ocfg,
+                                    agent_mesh=mesh, agent_blocks=2)
+    theta_v, hist_v = fedpg.run_jit(env, pol, cfg, key, ota=ocfg)
+    np.testing.assert_array_equal(np.asarray(hist_s.gain_mean),
+                                  np.asarray(hist_v.gain_mean))
+    _close(hist_s, hist_v, "padded sharded vs unsharded history")
+    _close(theta_s, theta_v, "padded sharded vs unsharded theta")
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices "
+                    "(REPRO_EMULATED_DEVICES=8)")
+def test_sharded_block_invariance_padded(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=10, batch_m=2, horizon=5, n_rounds=3)
+    mesh = make_agent_mesh(4)
+    tel = TelemetryConfig()
+    ref = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH, telemetry=tel,
+                        agent_mesh=mesh, agent_blocks=1)
+    for b in (2, 3):
+        theta, hist = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                                    telemetry=tel, agent_mesh=mesh,
+                                    agent_blocks=b)
+        # the dispersion probe's per-agent max-norm is the one quantity the
+        # SPMD partitioner fuses width-dependently (last-mantissa-bit; the
+        # mean over the same norms rounds identically) — tolerance there,
+        # bitwise everywhere else
+        _close(hist.telemetry.dispersion, ref[1].telemetry.dispersion,
+               f"sharded agent_blocks={b} dispersion")
+        hist = hist._replace(telemetry=hist.telemetry._replace(
+            dispersion=ref[1].telemetry.dispersion))
+        _bitwise((theta, hist), ref, f"sharded agent_blocks={b} vs 1")
+
+
+# ---------------------------------------------------------------------------
+# absolute-index contracts: heterogeneous fleets + per-agent power budgets
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_env_blocked_absolute_lanes(key):
+    # 5 lanes with distinct winds: a block that read lane parameters by
+    # in-block position instead of absolute index would swap dynamics
+    # between agents — far outside the reassociation tolerance
+    henv = make_heterogeneous_env(
+        [WindyLandmarkNav(wind=w) for w in (0.0, 0.05, 0.1, 0.15, 0.2)])
+    pol = MLPPolicy()
+    cfg = fedpg.FedPGConfig(n_agents=5, batch_m=2, horizon=5, n_rounds=3)
+    ref = fedpg.run_jit(henv, pol, cfg, key, ota=RAYLEIGH, agent_blocks=1)
+    for b in (2, 3):  # b=2 pads the 5-lane fleet with one phantom
+        got = fedpg.run_jit(henv, pol, cfg, key, ota=RAYLEIGH,
+                            agent_blocks=b)
+        _bitwise(got, ref, f"hetero agent_blocks={b} vs 1")
+    stacked = fedpg.run_jit(henv, pol, cfg, key, ota=RAYLEIGH)
+    np.testing.assert_array_equal(np.asarray(ref[1].gain_mean),
+                                  np.asarray(stacked[1].gain_mean))
+    _close(ref, stacked, "hetero streamed vs stacked")
+
+
+def test_heterogeneous_budget_blocked(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ocfg = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
+                     debias=True, power_control=HeterogeneousBudget())
+    ref = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, agent_blocks=1)
+    for b in (3, 4):
+        got = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, agent_blocks=b)
+        _bitwise(got, ref, f"hetero-budget agent_blocks={b} vs 1")
+    stacked = fedpg.run_jit(env, pol, cfg, key, ota=ocfg)
+    np.testing.assert_array_equal(np.asarray(ref[1].gain_mean),
+                                  np.asarray(stacked[1].gain_mean))
+    _close(ref, stacked, "hetero-budget streamed vs stacked")
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices "
+                    "(REPRO_EMULATED_DEVICES=8)")
+def test_heterogeneous_budget_sharded_absolute_index(env_pol, key):
+    # FixedGain base + per-agent budgets: the sharded form derives each
+    # agent's budget from its ABSOLUTE index (apply_indexed), the stacked
+    # form from linspace over the full fleet — any index misalignment in
+    # the padded blocked fold shows up here as a wrong per-agent gain
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=10, batch_m=2, horizon=5, n_rounds=3)
+    ocfg = OTAConfig(channel=FixedGainChannel(gain=1.5), noise_sigma=1e-3,
+                     debias=True, power_control=HeterogeneousBudget())
+    mesh = make_agent_mesh(4)
+    theta_s, hist_s = fedpg.run_jit(env, pol, cfg, key, ota=ocfg,
+                                    agent_mesh=mesh, agent_blocks=2)
+    theta_v, hist_v = fedpg.run_jit(env, pol, cfg, key, ota=ocfg)
+    np.testing.assert_array_equal(np.asarray(hist_s.gain_mean),
+                                  np.asarray(hist_v.gain_mean))
+    _close(hist_s, hist_v, "hetero-budget sharded vs unsharded")
+    _close(theta_s, theta_v, "hetero-budget sharded vs unsharded theta")
+
+
+# ---------------------------------------------------------------------------
+# event-triggered baseline under blocking
+# ---------------------------------------------------------------------------
+
+def test_event_triggered_blocked(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    et = event_triggered.ETConfig(tau=0.05)
+    theta_u, hist_u = event_triggered.run_jit(env, pol, cfg, et, key)
+    ref = event_triggered.run_jit(env, pol, cfg, et, key, agent_blocks=1)
+    for b in (3, 4):
+        got = event_triggered.run_jit(env, pol, cfg, et, key, agent_blocks=b)
+        _bitwise(got, ref, f"ET agent_blocks={b} vs 1")
+    # vs the unblocked loop: trigger decisions (channel uses) must agree
+    # exactly; the scalar metrics sit at reassociation tolerance
+    np.testing.assert_array_equal(np.asarray(ref[1].uploads),
+                                  np.asarray(hist_u.uploads))
+    _close(ref[1], hist_u, "ET blocked vs unblocked history")
+    _close(ref[0], theta_u, "ET blocked vs unblocked theta")
+
+
+# ---------------------------------------------------------------------------
+# the aggregate-level partition property
+# ---------------------------------------------------------------------------
+
+def _agg_grads(seed, n_agents):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    return {"w": jax.random.normal(ks[0], (n_agents, 3, 4), jnp.float32),
+            "b": jax.random.normal(ks[1], (n_agents, 5), jnp.float32)}
+
+
+@pytest.mark.parametrize("n_agents,b1,b2", [(1, 1, 5), (6, 1, 2), (6, 2, 3),
+                                            (7, 3, 7), (9, 4, 100)])
+def test_aggregate_partition_grid(n_agents, b1, b2, key):
+    g = _agg_grads(17, n_agents)
+    for cfg in (None, RAYLEIGH):
+        u1, h1 = ota.aggregate(g, cfg, key=key, agent_blocks=b1)
+        u2, h2 = ota.aggregate(g, cfg, key=key, agent_blocks=b2)
+        _bitwise((u1, h1), (u2, h2),
+                 f"aggregate N={n_agents} blocks {b1} vs {b2}")
+
+
+@given(st.integers(1, 12), st.integers(1, 16), st.integers(1, 16),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_aggregate_partition_property(n_agents, b1, b2, seed):
+    # blocking is a partition of the agent axis: ANY two partitions of the
+    # same fleet produce the bitwise-identical update (strict fold)
+    g = _agg_grads(seed, n_agents)
+    k = jax.random.key(seed + 1)
+    for cfg in (None, RAYLEIGH):
+        u1, h1 = ota.aggregate(g, cfg, key=k, agent_blocks=b1)
+        u2, h2 = ota.aggregate(g, cfg, key=k, agent_blocks=b2)
+        _bitwise((u1, h1), (u2, h2),
+                 f"aggregate N={n_agents} blocks {b1} vs {b2}")
+
+
+def test_blocked_layout_is_partition():
+    for n in (1, 2, 3, 7, 10, 33):
+        for b in (1, 2, 3, 5, 100):
+            nb, blk, pad = ota.blocked_layout(n, b)
+            assert nb * blk == n + pad
+            assert 0 <= pad < blk
+            # the >=2-blocks cap: XLA inlines a trip-count-1 scan, which
+            # refuses the bitwise block-invariance — never emit one
+            assert blk <= max(1, -(-n // 2))
+            assert blk <= b
+    with pytest.raises(ValueError):
+        ota.blocked_layout(4, 0)
+
+
+def test_cache_key_includes_program_shaping_args(env_pol, compile_counter):
+    """Regression for the stale-cache bug: ``telemetry`` / ``ota_backend`` /
+    ``agent_blocks`` each shape the compiled program, so flipping any of
+    them between two otherwise-identical calls must compile a distinct
+    program (and return that program's output) — never silently reuse the
+    previous one.  Pre-fix, the caches were keyed on (env, policy, cfg,
+    ota, n_runs) only and every flip below returned the stale program."""
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=3, batch_m=2, horizon=4, n_rounds=3)
+    keys = [jax.random.key(i) for i in range(9)]  # warm eager key helpers
+    fedpg.clear_compilation_cache()
+
+    _, base = fedpg.run_jit(env, pol, cfg, keys[0], ota=RAYLEIGH)
+    assert base.telemetry is None
+
+    flips = {
+        "telemetry": dict(telemetry=TelemetryConfig()),
+        "backend": dict(ota_backend="pallas"),
+        "agent_blocks": dict(agent_blocks=2),
+    }
+    for name, kw in flips.items():
+        with compile_counter() as c:
+            _, hist = fedpg.run_jit(env, pol, cfg, keys[1], ota=RAYLEIGH,
+                                    **kw)
+        assert c.count >= 1, \
+            f"run_jit reused a stale program across a {name} flip"
+        assert bool(jnp.all(jnp.isfinite(hist.rewards)))
+
+    # the flips produced the flipped program's OUTPUT, not just a recompile
+    _, tele = fedpg.run_jit(env, pol, cfg, keys[2], ota=RAYLEIGH,
+                            telemetry=TelemetryConfig())
+    assert tele.telemetry is not None
+    assert bool(jnp.all(jnp.isfinite(tele.telemetry.grad_norm_pre)))
+
+    # each keyed variant is itself cached: repeat call compiles nothing
+    with compile_counter() as c:
+        fedpg.run_jit(env, pol, cfg, keys[3], ota=RAYLEIGH, agent_blocks=2)
+    assert c.count == 0, "agent_blocks=2 variant was not cached"
+
+    # same contract on the monte_carlo cache
+    fedpg.clear_compilation_cache()
+    hist = fedpg.monte_carlo(env, pol, cfg, keys[4], 2, ota=RAYLEIGH)
+    assert hist.telemetry is None and hist.rewards.shape == (2, 3)
+    with compile_counter() as c:
+        tele_mc = fedpg.monte_carlo(env, pol, cfg, keys[5], 2, ota=RAYLEIGH,
+                                    telemetry=TelemetryConfig())
+    assert c.count >= 1, \
+        "monte_carlo reused a stale program across a telemetry flip"
+    assert tele_mc.telemetry is not None
+    with compile_counter() as c:
+        blocked = fedpg.monte_carlo(env, pol, cfg, keys[6], 2, ota=RAYLEIGH,
+                                    agent_blocks=2)
+    assert c.count >= 1, \
+        "monte_carlo reused a stale program across an agent_blocks flip"
+    assert blocked.rewards.shape == (2, 3)
+    with compile_counter() as c:
+        fedpg.monte_carlo(env, pol, cfg, keys[7], 2, ota=RAYLEIGH,
+                          agent_blocks=2)
+    assert c.count == 0, "blocked monte_carlo variant was not cached"
