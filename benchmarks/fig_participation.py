@@ -1,0 +1,120 @@
+"""Round-service benchmark: participation rate × staleness at N=10^4.
+
+The paper's Algorithm 2 is fully synchronous; ``repro.service`` relaxes
+it to partial/stale/faulty participation (the regime any real 10^4-agent
+OTA deployment actually runs in).  Two measurements:
+
+* **rate × staleness sweep** — the streamed (``agent_blocks``) service
+  round through the sweep engine: Bernoulli rates batch as lanes of one
+  compiled partition per staleness setting, each row carrying the
+  realised participation rate, the realised-vs-expected debias drift and
+  the mean replayed age from the in-jit telemetry probes, plus a
+  full-participation baseline row (which normalises to the *plain*
+  streamed round — same program, zero service overhead).
+* **driver acceptance run** — :class:`repro.service.driver.RoundService`
+  at N=10^4 with 50% Bernoulli participation AND straggler deadline
+  closure, streaming via ``agent_blocks``: commit-segment wall time and
+  the ledger's participation telemetry (the commit records land as
+  ``service`` events on the ambient ledger installed by
+  ``benchmarks/run.py --ledger``; render with
+  ``python -m repro.telemetry.report``).
+
+Emits rows consumed by ``benchmarks/run.py --json`` →
+``BENCH_participation.json`` in CI's ``service`` job.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import fedpg
+from repro.core.channel import RayleighChannel
+from repro.core.ota import OTAConfig
+from repro.core.sweep import grid, sweep
+from repro.rl.envs import make_env
+from repro.service.driver import RoundService, ServiceConfig
+from repro.service.faults import FaultConfig, StragglerModel
+from repro.service.participation import ParticipationConfig
+from repro.service.staleness import StalenessConfig
+from repro.telemetry.probes import TelemetryConfig
+
+from benchmarks.common import emit
+
+N_AGENTS = 10_000
+AGENT_BLOCKS = 64
+RATES = (0.25, 0.5)
+STALE = (None, StalenessConfig(max_age=4, decay=0.8))
+
+
+def run(quick: bool = False):
+    env = make_env("landmark")
+    policy = env.default_policy()
+    ota_cfg = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3,
+                        debias=True)
+    key = jax.random.key(7)
+    n_rounds = 2 if quick else 5
+    common = dict(channel=[RayleighChannel()], noise_sigma=1e-3, debias=True,
+                  n_agents=N_AGENTS, batch_m=1, horizon=3, n_rounds=n_rounds,
+                  agent_blocks=AGENT_BLOCKS)
+
+    # -- rate x staleness sweep, one sweep per staleness setting: the
+    #    telemetry stack keeps a field only when every scenario carries
+    #    it, and stale/non-stale are separate compile partitions anyway -
+    for stale in STALE:
+        scenarios = grid(staleness=stale,
+                         participation=[ParticipationConfig(rate=r)
+                                        for r in RATES], **common)
+        res = sweep(env, policy, scenarios, key, mc_runs=1,
+                    telemetry=TelemetryConfig())
+        max_age = 0 if stale is None else stale.max_age
+        for i, s in enumerate(res.scenarios):
+            tel = res.telemetry_summary(i) or {}
+            emit(
+                f"participation_rate{s.participation.rate:g}_stale{max_age}",
+                res.scenario_time_us(i),
+                f"agents={N_AGENTS};agent_blocks={AGENT_BLOCKS};"
+                f"rounds={n_rounds};rate={s.participation.rate:g};"
+                f"max_age={max_age};avg_grad_sq={res.avg_grad_sq(i):.4g};"
+                f"part_rate="
+                f"{tel.get('participation_rate', float('nan')):.4g};"
+                f"drift={tel.get('participation_drift', float('nan')):.4g};"
+                f"stale_mean={tel.get('staleness_mean', float('nan')):.4g}",
+            )
+    # full-participation baseline: normalises away, runs the plain
+    # streamed round (the zero-overhead contract), in its own sweep so
+    # the service sweep's telemetry stack keeps its service fields
+    base = grid(participation=[ParticipationConfig(kind="full")], **common)
+    bres = sweep(env, policy, base, key, mc_runs=1,
+                 telemetry=TelemetryConfig())
+    emit(
+        "participation_rate1_baseline",
+        bres.scenario_time_us(0),
+        f"agents={N_AGENTS};agent_blocks={AGENT_BLOCKS};rounds={n_rounds};"
+        f"rate=1;avg_grad_sq={bres.avg_grad_sq(0):.4g};"
+        "note=normalises_to_plain_streamed_round",
+    )
+
+    # -- the driver acceptance run: 50% Bernoulli + straggler deadline
+    #    closure, streamed, commit telemetry on the ambient ledger -------
+    p = ParticipationConfig(rate=0.5, faults=FaultConfig(
+        stragglers=StragglerModel(dist="exp", mean=1.0), deadline=2.0))
+    cfg = fedpg.FedPGConfig(n_agents=N_AGENTS, batch_m=1, horizon=3,
+                            n_rounds=1)
+    svc = RoundService(
+        env, policy, cfg, key, participation=p,
+        staleness=StalenessConfig(max_age=4, decay=0.8), ota=ota_cfg,
+        telemetry=TelemetryConfig(), agent_blocks=AGENT_BLOCKS,
+        service=ServiceConfig(rounds_per_commit=2,
+                              max_rounds=4 if quick else 8,
+                              round_deadline_s=600.0))
+    records = svc.run()
+    last = records[-1]
+    emit(
+        "participation_service_driver",
+        sum(r["wall_us"] for r in records),
+        f"agents={N_AGENTS};agent_blocks={AGENT_BLOCKS};"
+        f"rounds={last['round_end']};commits={len(records)};"
+        f"rate=0.5;deadline=2;"
+        f"part_rate={last.get('participation_rate', float('nan')):.4g};"
+        f"drift={last.get('participation_drift', float('nan')):.4g};"
+        f"staleness_hist={last.get('staleness_hist')}",
+    )

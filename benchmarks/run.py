@@ -22,8 +22,8 @@ import time
 
 from benchmarks import (  # noqa: E402
     et_baseline, fig12_rayleigh, fig3_vs_vanilla, fig45_nakagami,
-    fig_env_zoo, fig_large_n, fig_power_control, fig_scaling, microbench,
-    ota_kernel, roofline_table, theory_table,
+    fig_env_zoo, fig_large_n, fig_participation, fig_power_control,
+    fig_scaling, microbench, ota_kernel, roofline_table, theory_table,
 )
 from benchmarks.common import ROWS, emit
 from repro.telemetry import Ledger, set_ledger
@@ -53,6 +53,9 @@ SUITES = {
     "ota_kernel": lambda quick: ota_kernel.run(quick=quick),
     # streamed vs stacked round memory/throughput (BENCH_large_n.json in CI)
     "large_n": lambda quick: fig_large_n.run(quick=quick),
+    # round-service rate x staleness sweep + the N=10^4 driver run
+    # (BENCH_participation.json in CI's service job)
+    "participation": lambda quick: fig_participation.run(quick=quick),
 }
 
 

@@ -47,6 +47,14 @@ resulting jaxprs / compiled artifacts:
     with ``n_agents`` means the streamed form secretly materialises the
     agent axis and the O(block × d) claim is false.
 
+``participation-contract``
+    The round service's normaliser liveness (realized debias must
+    consume the PRNG key, expected debias must not), the sweep packing
+    of the continuous service knobs (rate / deadline / decay as live
+    lanes, structural knobs as partition splits, never-dropping configs
+    folded into the plain partition), and a ``key-reuse`` hygiene scan
+    of ``src/repro/service``.
+
 Checkers emit the same :class:`~repro.analyze.findings.Finding` records as
 the AST layer; source anchors point at the module that owns the violated
 invariant.  jax is imported lazily so ``--ast-only`` runs never pay for it.
@@ -160,6 +168,27 @@ def _expected_packed_keys(part) -> set:
         if proto.debias and ("channel" in expected
                              or "power_control" in expected):
             expected.add("update_scale")
+    # round-service lane axes (see sweep._pack_partition): Bernoulli rate,
+    # fault deadline (realized debias only) and staleness decay batch
+    from repro.service import participation as svc_participation
+    from repro.service import staleness as svc_staleness
+
+    p0 = svc_participation.normalize(proto.participation, proto.n_agents)
+    if p0 is not None:
+        pn = [svc_participation.normalize(s.participation, s.n_agents)
+              for s in scens]
+        if p0.kind == "bernoulli" \
+                and len({float(p.rate) for p in pn}) > 1:
+            expected.add("participation_rate")
+        if p0.debias == "realized" and p0.faults is not None \
+                and p0.faults.active \
+                and len({float(p.faults.deadline) for p in pn}) > 1:
+            expected.add("participation_deadline")
+        st0 = svc_staleness.normalize(proto.staleness, p0)
+        if st0 is not None and len(
+                {float(svc_staleness.normalize(s.staleness, q).decay)
+                 for s, q in zip(scens, pn)}) > 1:
+            expected.add("staleness_decay")
     return expected
 
 
@@ -616,3 +645,127 @@ def check_stream_contract(report: Report) -> None:
             f"agent_blocks={block} — some loop state scales with the fleet "
             f"(only at N={small}: {only_small}; only at N={large}: "
             f"{only_large})"))
+
+
+# ---------------------------------------------------------------------------
+# participation-contract
+# ---------------------------------------------------------------------------
+
+_PARTICIPATION_PATH = "src/repro/service/participation.py"
+
+
+def _key_invar_live(closed_jaxpr) -> bool:
+    """Whether any top-level input variable of the jaxpr is consumed by an
+    equation (or returned)."""
+    import jax
+
+    jaxpr = closed_jaxpr.jaxpr
+    used = set()
+    for eqn in jaxpr.eqns:
+        for v in eqn.invars:
+            if not isinstance(v, jax.core.Literal):
+                used.add(v)
+    for v in jaxpr.outvars:
+        if not isinstance(v, jax.core.Literal):
+            used.add(v)
+    return any(v in used for v in jaxpr.invars)
+
+
+@register_check("participation-contract")
+def check_participation_contract(report: Report) -> None:
+    """The round service's debias-normaliser and lane-packing contracts.
+
+    1. ``debias="realized"``: the traced ``key -> N/W`` normaliser
+       (``participation.scale_jaxpr``) must CONSUME its key — the
+       realised count is data-dependent on the drawn mask, and a dead key
+       means the normaliser constant-folded back to the expected-count
+       analysis.  ``debias="expected"``: the key must be DEAD — the
+       closed-form normaliser must not touch the realisation.
+    2. The sweep engine packs exactly the continuous service knobs
+       (Bernoulli rate, fault deadline under realized debias, staleness
+       decay) as live lane inputs, while the structural knobs (kind,
+       debias mode) split partitions.
+    3. The counter-PRNG hygiene of ``src/repro/service`` itself: the
+       ``key-reuse`` AST rule over the whole package (mask and fault
+       draws must stay pure fold_in counter-mode).
+    """
+    from repro.core.channel import RayleighChannel
+    from repro.core.sweep import Scenario, partition_scenarios
+    from repro.rl.envs import make_env
+    from repro.service.faults import FaultConfig, StragglerModel
+    from repro.service.participation import ParticipationConfig, scale_jaxpr
+    from repro.service.staleness import StalenessConfig
+
+    realized = [
+        ParticipationConfig(rate=0.5),
+        ParticipationConfig(kind="subset", subset=3),
+        ParticipationConfig(kind="full", faults=FaultConfig(
+            stragglers=StragglerModel(mean=1.0), deadline=1.0)),
+    ]
+    for p in realized:
+        if not _key_invar_live(scale_jaxpr(p)):
+            report.findings.append(_finding(
+                "participation-contract", _PARTICIPATION_PATH,
+                f"realized-debias normaliser for {p.kind!r} does not "
+                "consume its PRNG key — N/W constant-folded back to the "
+                "expected-count analysis"))
+    expected = ParticipationConfig(rate=0.5, debias="expected")
+    if _key_invar_live(scale_jaxpr(expected)):
+        report.findings.append(_finding(
+            "participation-contract", _PARTICIPATION_PATH,
+            "expected-debias normaliser consumes the PRNG key — the "
+            "closed-form E[W] must not depend on the realisation"))
+
+    # 2) lane packing: each continuous service knob batches as a live lane
+    #    input of a single partition program
+    env = make_env("landmark")
+    chan = RayleighChannel()
+
+    def svc_scen(**kw):
+        return Scenario(channel=chan, noise_sigma=1e-3, env=env,
+                        debias=True, **_TINY, **kw)
+
+    _check_one_partition(report, [
+        svc_scen(participation=ParticipationConfig(rate=r))
+        for r in (0.3, 0.7)
+    ], "service rate axis")
+    _check_one_partition(report, [
+        svc_scen(participation=ParticipationConfig(kind="full", faults=FaultConfig(
+            stragglers=StragglerModel(mean=1.0), deadline=d)))
+        for d in (0.5, 2.0)
+    ], "service deadline axis")
+    _check_one_partition(report, [
+        svc_scen(participation=ParticipationConfig(rate=0.5),
+                 staleness=StalenessConfig(max_age=2, decay=dc))
+        for dc in (0.5, 0.9)
+    ], "service staleness-decay axis")
+
+    # structural knobs must SPLIT: realized vs expected debias are
+    # different programs (live vs dead key), never lanes of one
+    split = partition_scenarios([
+        svc_scen(participation=ParticipationConfig(rate=0.5, debias=d))
+        for d in ("realized", "expected")
+    ])
+    if len(split) != 2:
+        report.findings.append(_finding(
+            "participation-contract", _SWEEP_PATH,
+            "realized- and expected-debias scenarios merged into one "
+            "partition — the debias mode is structural and must split"))
+    # ...and a config that can never drop an agent must share the plain
+    # partition (byte-identical programs)
+    merged = partition_scenarios([
+        svc_scen(participation=None),
+        svc_scen(participation=ParticipationConfig(rate=1.0)),
+    ])
+    if len(merged) != 1:
+        report.findings.append(_finding(
+            "participation-contract", _SWEEP_PATH,
+            "a full-participation config split from the plain partition — "
+            "normalize() must fold it to participation=None"))
+
+    # 3) PRNG hygiene of the service package itself
+    from repro.analyze.engine import repo_root, scan
+    from repro.analyze.rules import get_rules
+
+    scan(repo_root(), ["src/repro/service"], rules=get_rules(["key-reuse"]),
+         report=report)

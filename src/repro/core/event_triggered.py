@@ -29,6 +29,7 @@ from repro.core.fedpg import (
 )
 from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import discounted_return, empirical_reward, rollout_batch
+from repro.service import participation as svc_participation
 from repro.utils.tree import (
     tree_global_norm_sq, tree_sub, tree_zeros_like,
 )
@@ -48,7 +49,7 @@ class ETHistory(NamedTuple):
 
 
 def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
-        *, agent_blocks=None):
+        *, agent_blocks=None, participation=None):
     """K rounds of event-triggered federated PG. Returns (theta, ETHistory).
 
     ``agent_blocks`` rolls the fleet out in blocked-scan chunks of that
@@ -59,8 +60,25 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
     paper argues.  The full (N,)-stacked gradients are re-materialised from
     the scan outputs, so the trigger/aggregate tail — and the emitted
     history — is identical to the unblocked program's.
+
+    ``participation`` (an active
+    :class:`~repro.service.participation.ParticipationConfig`) gates the
+    trigger with the same per-round mask the OTA service rounds draw: an
+    agent uploads iff it *participates* AND its gradient moved enough, so
+    a non-participant's trigger state does not advance (the server keeps
+    its last uploaded copy and its reference gradient stays put — exactly
+    LAPG semantics under intermittent availability).  The server mean
+    still runs over all N stale copies; the reward averages the
+    participants' fresh trajectories.  A config that normalises away
+    emits the byte-identical plain program.
     """
-    key_init, key_scan = jax.random.split(key)
+    part = svc_participation.normalize(participation, cfg.n_agents)
+    if part is None:
+        key_init, key_scan = jax.random.split(key)
+    else:
+        key_init, key_scan, key_svc = jax.random.split(key, 3)
+        part_key, sched_key = jax.random.split(key_svc)
+        agent_ids = jnp.arange(cfg.n_agents, dtype=jnp.int32)
     theta = policy.init(key_init)
     # honour cfg.estimator exactly like fedpg.make_round_fn does
     grad_fn = _estimator_grad(cfg)
@@ -75,7 +93,10 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
         n_blocks, block, pad = ota.blocked_layout(cfg.n_agents, agent_blocks)
 
     def round_fn(carry, key_k):
-        theta, stale = carry
+        if part is None:
+            theta, stale = carry
+        else:
+            theta, stale, round_idx = carry
         agent_keys = jax.random.split(key_k, cfg.n_agents)
         lane_stacks = dict(env.params) if hetero else {}
 
@@ -87,7 +108,10 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
 
         if agent_blocks is None:
             grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)
-            reward = empirical_reward(trajs, cfg.gamma)
+            if part is None:
+                reward = empirical_reward(trajs, cfg.gamma)
+            else:
+                returns_pa = discounted_return(trajs.losses, cfg.gamma)
         else:
             xs = (ota.block_view(ota.pad_agent_axis(agent_keys, pad),
                                  n_blocks, block),
@@ -102,8 +126,12 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
             grads = jax.tree.map(
                 lambda a: a.reshape((n_blocks * block,) + a.shape[2:])
                 [:cfg.n_agents], g_blocks)
-            reward = -jnp.mean(returns.reshape(
-                (n_blocks * block,) + returns.shape[2:])[:cfg.n_agents])
+            if part is None:
+                reward = -jnp.mean(returns.reshape(
+                    (n_blocks * block,) + returns.shape[2:])[:cfg.n_agents])
+            else:
+                returns_pa = returns.reshape(
+                    (n_blocks * block,) + returns.shape[2:])[:cfg.n_agents]
 
         # trigger test per agent
         def trig(g_new, g_old):
@@ -111,6 +139,17 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
             return diff >= et.tau * tree_global_norm_sq(g_new)
 
         fire = jax.vmap(trig)(grads, stale)                   # (N,) bool
+        if part is not None:
+            # an agent uploads iff it participates AND triggers — a
+            # non-participant's server copy and trigger reference both
+            # stay put (the `used` carry below keeps its stale row)
+            mask = svc_participation.round_mask(
+                part, part_key, sched_key, round_idx, agent_ids,
+                cfg.n_agents)
+            fire = jnp.logical_and(mask, fire)
+            count_p = jnp.sum(mask.astype(jnp.float32))
+            reward = -jnp.sum(jnp.where(mask[:, None], returns_pa, 0.0)) \
+                * svc_participation.safe_inv(count_p) / cfg.batch_m
 
         # server-side view: fresh where fired, stale otherwise
         used = jax.tree.map(
@@ -123,33 +162,42 @@ def run(env, policy, cfg: FedPGConfig, et: ETConfig, key: jax.Array,
         theta = jax.tree.map(lambda p, u: p - cfg.alpha * u, theta, update)
 
         gsq = tree_global_norm_sq(update)
-        return (theta, used), (reward, gsq, jnp.sum(fire))
+        metrics = (reward, gsq, jnp.sum(fire))
+        if part is None:
+            return (theta, used), metrics
+        return (theta, used, round_idx + 1), metrics
 
     keys = jax.random.split(key_scan, cfg.n_rounds)
-    (theta, _), (rewards, gsq, ups) = jax.lax.scan(
-        round_fn, (theta, stale0), keys
-    )
+    carry0 = (theta, stale0) if part is None \
+        else (theta, stale0, jnp.zeros((), jnp.int32))
+    carry, (rewards, gsq, ups) = jax.lax.scan(round_fn, carry0, keys)
+    theta = carry[0]
     return theta, ETHistory(rewards=rewards, grad_sq=gsq,
                             uploads=ups.astype(jnp.float32))
 
 
 @functools.lru_cache(maxsize=64)
 def _compiled_run(env, policy, cfg: FedPGConfig, et: ETConfig,
-                  agent_blocks=None):
+                  agent_blocks=None, participation=None):
     return jax.jit(
-        lambda k: run(env, policy, cfg, et, k, agent_blocks=agent_blocks))
+        lambda k: run(env, policy, cfg, et, k, agent_blocks=agent_blocks,
+                      participation=participation))
 
 
 register_compiled_cache(_compiled_run)
 
 
 def run_jit(env, policy, cfg: FedPGConfig, et: ETConfig, key,
-            *, agent_blocks=None):
+            *, agent_blocks=None, participation=None):
     """Compiled entry point; reuses the program across calls with the same
-    (hashable) ``(env, policy, cfg, et, agent_blocks)``, like
-    ``fedpg.run_jit``."""
-    if _hashable(env, policy, cfg, et, agent_blocks):
-        return _compiled_run(env, policy, cfg, et, agent_blocks)(key)
+    (hashable) ``(env, policy, cfg, et, agent_blocks, participation)``,
+    like ``fedpg.run_jit`` (the participation config is normalised before
+    keying, so full participation hits the same entry as ``None``)."""
+    participation = svc_participation.normalize(participation, cfg.n_agents)
+    if _hashable(env, policy, cfg, et, agent_blocks, participation):
+        return _compiled_run(env, policy, cfg, et, agent_blocks,
+                             participation)(key)
     return jax.jit(
         lambda k: run(env, policy, cfg, et, k,
-                      agent_blocks=agent_blocks))(key)
+                      agent_blocks=agent_blocks,
+                      participation=participation))(key)

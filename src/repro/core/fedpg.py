@@ -27,6 +27,10 @@ from repro.core import ota
 from repro.core.ota import OTAConfig
 from repro.rl.envs.heterogeneous import HeterogeneousEnv, check_agent_count
 from repro.rl.sampler import empirical_reward, rollout_batch
+from repro.service import participation as svc_participation
+from repro.service import staleness as svc_staleness
+from repro.service.participation import ParticipationConfig, ServiceState
+from repro.service.staleness import StalenessConfig
 from repro.telemetry.probes import RoundTelemetry, TelemetryConfig
 from repro.telemetry import probes as _probes
 from repro.utils.tree import tree_global_norm_sq
@@ -59,10 +63,17 @@ class History(NamedTuple):
 
 def _active_telemetry(
     telemetry: Optional[TelemetryConfig],
+    participation: Optional[ParticipationConfig] = None,
 ) -> Optional[TelemetryConfig]:
     """Normalise: a config with every probe off is telemetry-off (the
-    emitted program must be byte-identical to ``telemetry=None``)."""
-    if telemetry is not None and telemetry.active:
+    emitted program must be byte-identical to ``telemetry=None``).  The
+    ``participation`` probe flag only counts when an active (normalised)
+    participation config makes a service round — on plain runs it has
+    nothing to observe and must not activate telemetry."""
+    if telemetry is None:
+        return None
+    if telemetry.active or (participation is not None
+                            and telemetry.participation):
         return telemetry
     return None
 
@@ -86,8 +97,24 @@ def make_round_fn(
     ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
     agent_blocks: Optional[int] = None,
+    participation: Optional[ParticipationConfig] = None,
+    staleness: Optional[StalenessConfig] = None,
 ):
     """One communication round: (theta, key) -> (theta', metrics).
+
+    With an *active* ``participation`` config (one that can actually drop
+    agents — see :func:`repro.service.participation.normalize`) the round
+    becomes a service round ``(ServiceState, key) -> (ServiceState',
+    metrics)``: a per-round participation mask (counter-PRNG on ``(round,
+    agent_id)``, block/shard invariant) selects the contributing agents,
+    non-contributors are masked to exact zeros phantom-agent style, and
+    the update is renormalised by the realised (or closed-form expected)
+    contribution weight.  ``staleness`` additionally replays
+    non-participants' last contributed gradients with age-decay weights
+    (stacked and ``agent_blocks`` forms; not composed with
+    ``agent_mesh``).  A config that normalises away — ``kind="full"``, a
+    static Bernoulli ``rate >= 1`` with no active faults — emits the
+    byte-identical plain round.
 
     A ``HeterogeneousEnv`` is unrolled per agent: the agent vmap additionally
     maps over the wrapper's per-agent field stacks, so agent i samples from
@@ -136,16 +163,19 @@ def make_round_fn(
     across the mesh; a non-dividing ``n_agents`` is then padded with
     masked phantom agents instead of raising.
     """
-    telem = _active_telemetry(telemetry)
+    part = svc_participation.normalize(participation, cfg.n_agents)
+    stale_cfg = svc_staleness.normalize(staleness, part)
+    telem = _active_telemetry(telemetry, part)
 
     if agent_mesh is not None:
         return _make_agent_sharded_round_fn(
             env, policy, cfg, ota_cfg, agent_mesh, agent_axis, ota_backend,
-            telemetry=telem, agent_blocks=agent_blocks)
+            telemetry=telem, agent_blocks=agent_blocks,
+            participation=part, staleness=stale_cfg)
     if agent_blocks is not None:
         return _make_streamed_round_fn(
             env, policy, cfg, ota_cfg, agent_blocks, ota_backend,
-            telemetry=telem)
+            telemetry=telem, participation=part, staleness=stale_cfg)
 
     grad_fn = _estimator_grad(cfg)
     hetero = isinstance(env, HeterogeneousEnv)
@@ -197,13 +227,108 @@ def make_round_fn(
             update_norm=update_norm)
         return theta_next, (reward, grad_sq, gain_mean, probes)
 
-    return round_fn
+    if part is None:
+        return round_fn
+
+    from repro.rl.sampler import discounted_return
+
+    def service_round(state: ServiceState, key: jax.Array):
+        theta = state.theta
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+        ids = jnp.arange(cfg.n_agents, dtype=jnp.int32)
+        mask = svc_participation.round_mask(
+            part, state.part_key, state.sched_key, state.round_idx, ids,
+            cfg.n_agents)
+        mf = mask.astype(jnp.float32)
+        count_p = jnp.sum(mf)
+
+        # rollouts run for every agent (same per-agent keys as the plain
+        # round: the realised trajectories of a participant are identical
+        # whether or not its peers made the round); non-participants are
+        # masked to exact-zero rows before any cross-agent reduction.
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        lane_stacks = dict(env.params) if hetero else {}
+        grads, trajs = jax.vmap(agent_grad)(agent_keys, lane_stacks)
+        gm = svc_participation.mask_agent_axis(grads, mask)
+
+        if stale_cfg is not None:
+            rw = svc_staleness.replay_weights(stale_cfg, mask, state.stale.age)
+            w_replay, _, stale_age = svc_staleness.stats(
+                stale_cfg, mask, state.stale.age)
+            ssum = svc_staleness.replay_sum_stacked(state.stale, rw)
+            stale_next = svc_staleness.advance(
+                stale_cfg, state.stale, mask, grads)
+        else:
+            w_replay = jnp.zeros((), jnp.float32)
+            ssum = stale_next = stale_age = None
+
+        w_real = count_p + w_replay
+        w_norm = w_real if part.debias == "realized" else jnp.asarray(
+            svc_participation.expected_count(part, cfg.n_agents), jnp.float32)
+        inv_w = svc_participation.safe_inv(w_norm)
+        pf = svc_participation.participation_factor(cfg.n_agents, w_norm)
+
+        gsum = jax.tree.map(lambda g: jnp.sum(g, axis=0), gm)
+        if ssum is not None:
+            gsum = jax.tree.map(jnp.add, gsum, ssum)
+        mean_grad = jax.tree.map(lambda s: s * inv_w, gsum)
+
+        if ota_cfg is None:
+            gain_mean = jnp.ones(())
+            update = mean_grad
+        else:
+            key_h, _ = jax.random.split(key_chan)
+            h = ota.sample_gains(ota_cfg, key_h, cfg.n_agents)
+            hm = jnp.where(mask, h, jnp.zeros_like(h))
+            # passing key_chan reproduces the plain round's AWGN stream:
+            # aggregate re-splits it to the same key_n internally
+            u_fresh = ota.aggregate(gm, ota_cfg, key=key_chan, gains=hm,
+                                    backend=ota_backend)[0]
+            update = jax.tree.map(lambda u: u * pf, u_fresh)
+            if ssum is not None:
+                update = jax.tree.map(
+                    lambda u, s: u + s * inv_w, update, ssum)
+            gain_mean = jnp.sum(hm) * svc_participation.safe_inv(count_p)
+        theta_next = jax.tree.map(
+            lambda p, u: p - cfg.alpha * u, theta, update)
+
+        # metrics over the agents that actually made the round
+        returns = discounted_return(trajs.losses, cfg.gamma)
+        reward = -jnp.sum(jnp.where(mask[:, None], returns, 0.0)) \
+            * svc_participation.safe_inv(count_p) / cfg.batch_m
+        grad_sq = tree_global_norm_sq(mean_grad)
+
+        state_next = state._replace(theta=theta_next,
+                                    round_idx=state.round_idx + 1,
+                                    stale=stale_next)
+        if telem is None:
+            return state_next, (reward, grad_sq, gain_mean)
+
+        probes = _probes.stacked_round_probes(
+            telem, grads_stacked=gm, gains=hm if ota_cfg is not None else mf,
+            ota_cfg=ota_cfg, n_agents=cfg.n_agents, gain_mean=gain_mean,
+            update_norm=jnp.sqrt(tree_global_norm_sq(update)))
+        probes = _probes.participation_probes(
+            telem, probes, rate_realized=count_p / cfg.n_agents,
+            rate_expected=svc_participation.expected_count(
+                part, cfg.n_agents) / cfg.n_agents,
+            staleness_mean=stale_age)
+        return state_next, (reward, grad_sq, gain_mean, probes)
+
+    return service_round
 
 
 def _make_streamed_round_fn(
     env, policy, cfg: FedPGConfig, ota_cfg: Optional[OTAConfig],
     agent_blocks: int, ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
+    participation: Optional[ParticipationConfig] = None,
+    staleness: Optional[StalenessConfig] = None,
 ):
     """The vmap round evaluated as a blocked scan over the agent axis.
 
@@ -314,7 +439,161 @@ def _make_streamed_round_fn(
             gain_mean=gain_mean, update_norm=update_norm)
         return theta_next, (reward, grad_sq, gain_mean, probes)
 
-    return round_fn
+    part, stale_cfg = participation, staleness
+    if part is None:
+        return round_fn
+
+    def service_round(state: ServiceState, key: jax.Array):
+        # the mask, replay weights and every normaliser scalar derive from
+        # (N,) vectors computed BEFORE the block scan — identical across
+        # block sizes, so the streamed service round inherits the blocked
+        # round's bitwise block-invariance.
+        theta = state.theta
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+        lane_stacks = dict(env.params) if hetero else {}
+        ids = jnp.arange(cfg.n_agents, dtype=jnp.int32)
+        mask = svc_participation.round_mask(
+            part, state.part_key, state.sched_key, state.round_idx, ids,
+            cfg.n_agents)
+        mf = mask.astype(jnp.float32)
+        count_p = jnp.sum(mf)
+
+        if stale_cfg is not None:
+            rw = svc_staleness.replay_weights(stale_cfg, mask, state.stale.age)
+            w_replay, _, stale_age = svc_staleness.stats(
+                stale_cfg, mask, state.stale.age)
+        else:
+            rw = None
+            w_replay = jnp.zeros((), jnp.float32)
+            stale_age = None
+        w_real = count_p + w_replay
+        w_norm = w_real if part.debias == "realized" else jnp.asarray(
+            svc_participation.expected_count(part, cfg.n_agents), jnp.float32)
+        inv_w = svc_participation.safe_inv(w_norm)
+
+        def _pad_row(a):
+            return jnp.concatenate([a, jnp.zeros((pad,), a.dtype)]) \
+                if pad else a
+
+        xs = {
+            "keys": ota.block_view(
+                ota.pad_agent_axis(agent_keys, pad), n_blocks, block),
+            "stacks": ota.block_view(
+                ota.pad_agent_axis(lane_stacks, pad), n_blocks, block),
+            "valid": ota.block_valid_mask(cfg.n_agents, n_blocks, block),
+            "pmask": _pad_row(mf).reshape(n_blocks, block),
+        }
+        if noisy:
+            key_h, key_n = jax.random.split(key_chan)
+            h = ota.sample_gains(ota_cfg, key_h, cfg.n_agents)
+            hm = jnp.where(mask, h, jnp.zeros_like(h))
+            xs["gains"] = _pad_row(hm).reshape(n_blocks, block)
+        if stale_cfg is not None:
+            xs["stale"] = ota.block_view(
+                ota.pad_agent_axis(state.stale.grads, pad), n_blocks, block)
+            xs["rw"] = _pad_row(rw).reshape(n_blocks, block)
+
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        def block_body(carry, x):
+            grads_b, trajs_b = jax.vmap(agent_grad)(x["keys"], x["stacks"])
+            out = {"gsum": ota.stream_fold_block(
+                carry["gsum"], grads_b, x["pmask"], x["valid"])}
+            ys = {"returns": discounted_return(trajs_b.losses, cfg.gamma)}
+            if want_norms:
+                ys["norms_sq"] = sum(
+                    _probes._leaf_norms(g, block)
+                    for g in jax.tree.leaves(grads_b))
+            if stale_cfg is not None:
+                out["ssum"] = ota.stream_fold_block(
+                    carry["ssum"], x["stale"], x["rw"], x["valid"])
+                pm = x["pmask"] > 0
+                ys["stale_new"] = jax.tree.map(
+                    lambda fresh, old: jnp.where(
+                        pm.reshape((-1,) + (1,) * (fresh.ndim - 1)),
+                        fresh, old),
+                    grads_b, x["stale"])
+            if noisy:
+                gb = jax.tree.map(
+                    lambda a: a.astype(jnp.float32), grads_b) \
+                    if pallas else grads_b
+                out["v"] = ota.stream_fold_block(
+                    carry["v"], gb, x["gains"], x["valid"],
+                    wire_dtype=wire_dt)
+            return out, ys
+
+        carry0 = {"gsum": jax.tree.map(jnp.zeros_like, theta)}
+        if stale_cfg is not None:
+            carry0["ssum"] = jax.tree.map(jnp.zeros_like, theta)
+        if noisy:
+            vdt = (lambda p: jnp.float32) if pallas else (lambda p: p.dtype)
+            carry0["v"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, vdt(p)), theta)
+        carry, ys = jax.lax.scan(block_body, carry0, xs)
+
+        gsum = carry["gsum"]
+        if stale_cfg is not None:
+            gsum = jax.tree.map(jnp.add, gsum, carry["ssum"])
+        mean_grad = jax.tree.map(lambda s: s * inv_w, gsum)
+        grad_sq = tree_global_norm_sq(mean_grad)
+
+        if not noisy:
+            gain_mean = jnp.ones(())
+            update = mean_grad
+        else:
+            update = ota.stream_finalize(
+                ota_cfg, key_n, carry["v"], cfg.n_agents,
+                backend="pallas" if pallas else "xla", n_eff=w_norm)
+            if stale_cfg is not None:
+                update = jax.tree.map(
+                    lambda u, s: u + s * inv_w, update, carry["ssum"])
+            gain_mean = jnp.sum(hm) * svc_participation.safe_inv(count_p)
+        theta_next = jax.tree.map(
+            lambda p, u: p - cfg.alpha * u, theta, update)
+
+        returns = ys["returns"].reshape(
+            (n_blocks * block,) + ys["returns"].shape[2:])[:cfg.n_agents]
+        reward = -jnp.sum(jnp.where(mask[:, None], returns, 0.0)) \
+            * svc_participation.safe_inv(count_p) / cfg.batch_m
+
+        if stale_cfg is not None:
+            buf = jax.tree.map(
+                lambda s: s.reshape(
+                    (n_blocks * block,) + s.shape[2:])[:cfg.n_agents],
+                ys["stale_new"])
+            age = jnp.where(mask, jnp.int32(1),
+                            jnp.minimum(state.stale.age + 1,
+                                        svc_staleness.AGE_NEVER))
+            stale_next = svc_staleness.StaleState(grads=buf, age=age)
+        else:
+            stale_next = None
+        state_next = state._replace(theta=theta_next,
+                                    round_idx=state.round_idx + 1,
+                                    stale=stale_next)
+        if telemetry is None:
+            return state_next, (reward, grad_sq, gain_mean)
+
+        norms_sq = jnp.where(
+            mask, ys["norms_sq"].reshape(-1)[:cfg.n_agents], 0.0) \
+            if want_norms else None
+        probes = _probes.streamed_round_probes(
+            telemetry, v=carry["v"] if noisy else None, norms_sq=norms_sq,
+            ota_cfg=ota_cfg, n_agents=cfg.n_agents,
+            param_dim=sum(int(p.size) for p in jax.tree.leaves(theta)),
+            gain_mean=gain_mean,
+            update_norm=jnp.sqrt(tree_global_norm_sq(update)))
+        probes = _probes.participation_probes(
+            telemetry, probes, rate_realized=count_p / cfg.n_agents,
+            rate_expected=svc_participation.expected_count(
+                part, cfg.n_agents) / cfg.n_agents,
+            staleness_mean=stale_age)
+        return state_next, (reward, grad_sq, gain_mean, probes)
+
+    return service_round
 
 
 def _make_agent_sharded_round_fn(
@@ -322,6 +601,8 @@ def _make_agent_sharded_round_fn(
     mesh, axis_name: str, ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
     agent_blocks: Optional[int] = None,
+    participation: Optional[ParticipationConfig] = None,
+    staleness: Optional[StalenessConfig] = None,
 ):
     """The agent axis laid across ``mesh[axis_name]`` via shard_map.
 
@@ -354,6 +635,18 @@ def _make_agent_sharded_round_fn(
         raise ValueError(
             f"agent mesh has no axis {axis_name!r}; axes are "
             f"{tuple(mesh.axis_names)}")
+    part, stale_cfg = participation, staleness
+    if stale_cfg is not None:
+        raise ValueError(
+            "staleness replay does not compose with agent_mesh: the stale "
+            "buffer is absolute-agent-indexed carried state and the mesh "
+            "round carries only replicated theta (use agent_blocks without "
+            "a mesh, or staleness=None)")
+    if part is not None and agent_blocks is None:
+        raise ValueError(
+            "participation under agent_mesh needs agent_blocks: the "
+            "service round reuses the streamed shard path's phantom-agent "
+            "masking (any block size works, e.g. agent_blocks=n_local)")
     n_shards = mesh.shape[axis_name]
     if cfg.n_agents % n_shards != 0 and agent_blocks is None:
         raise ValueError(
@@ -492,6 +785,113 @@ def _make_agent_sharded_round_fn(
             update_norm=jnp.sqrt(tree_global_norm_sq(update)))
         return theta_next, (reward, grad_sq, gain_mean, probes)
 
+    def local_round_streamed_svc(theta, agent_keys, lane_stacks, key_chan,
+                                 round_idx, part_key, sched_key):
+        # the streamed shard body with a participation mask: each shard
+        # derives its rows of the GLOBAL mask from absolute agent indices
+        # (the same counter-PRNG scheme as ``sharded_stream_gains``), so
+        # the realised mask is invariant to the mesh layout and blocking.
+        def agent_grad(k, lane_params):
+            e = env.lane(lane_params) if hetero else env
+            traj = rollout_batch(e, policy, theta, k, cfg.horizon, cfg.batch_m)
+            return grad_fn(policy, theta, traj, cfg.gamma), traj
+
+        _, valid_local = ota._sharded_stream_meta(
+            (axis_name,), n_local, cfg.n_agents)
+        idx, _ = ota._flat_axis_index((axis_name,))
+        gids = idx * n_local + jnp.arange(n_local, dtype=jnp.int32)
+        mask_local = jnp.logical_and(
+            svc_participation.round_mask(part, part_key, sched_key,
+                                         round_idx, gids, cfg.n_agents),
+            valid_local)
+        mf_local = mask_local.astype(jnp.float32)
+        count_p = jax.lax.psum(jnp.sum(mf_local), axis_name)
+        w_norm = count_p if part.debias == "realized" else jnp.asarray(
+            svc_participation.expected_count(part, cfg.n_agents), jnp.float32)
+        inv_w = svc_participation.safe_inv(w_norm)
+
+        if ota_cfg is not None:
+            key_h, key_n = jax.random.split(key_chan)
+            h, valid_local = ota.sharded_stream_gains(
+                ota_cfg, key_h, (axis_name,), n_local, cfg.n_agents)
+            hm = jnp.where(mask_local, h, jnp.zeros_like(h))
+
+        def _pad_row(a):
+            return jnp.concatenate(
+                [a, jnp.zeros((bpad,), a.dtype)]) if bpad else a
+
+        vp = _pad_row(valid_local)
+        xs = {
+            "keys": ota.block_view(
+                ota.pad_agent_axis(agent_keys, bpad), nb, blk),
+            "stacks": ota.block_view(
+                ota.pad_agent_axis(lane_stacks, bpad), nb, blk),
+            "valid": vp.reshape(nb, blk),
+            "pmask": _pad_row(mf_local).reshape(nb, blk),
+        }
+        if ota_cfg is not None:
+            xs["gains"] = _pad_row(hm).reshape(nb, blk)
+
+        def block_body(carry, x):
+            grads_b, trajs_b = jax.vmap(agent_grad)(x["keys"], x["stacks"])
+            gsum = ota.stream_fold_block(carry[0], grads_b, x["pmask"],
+                                         x["valid"])
+            ys = {"returns": discounted_return(trajs_b.losses, cfg.gamma)}
+            if want_norms:
+                ys["norms_sq"] = sum(
+                    _probes._leaf_norms(g, blk)
+                    for g in jax.tree.leaves(grads_b))
+            if ota_cfg is None:
+                return (gsum,), ys
+            v = ota.stream_fold_block(carry[1], grads_b, x["gains"],
+                                      x["valid"])
+            return (gsum, v), ys
+
+        carry0 = (jax.tree.map(jnp.zeros_like, theta),)
+        if ota_cfg is not None:
+            carry0 += (jax.tree.map(jnp.zeros_like, theta),)
+        carry, ys = jax.lax.scan(block_body, carry0, xs)
+
+        mean_grad = jax.tree.map(
+            lambda s: jax.lax.psum(s, axis_name) * inv_w, carry[0])
+        v_global = None
+        if ota_cfg is None:
+            update = mean_grad
+            gain_mean = jnp.ones(())
+        else:
+            v_global = jax.tree.map(
+                lambda s: jax.lax.psum(s, axis_name), carry[1])
+            update = ota.stream_finalize(ota_cfg, key_n, v_global,
+                                         cfg.n_agents, n_eff=w_norm)
+            gain_mean = jax.lax.psum(jnp.sum(hm), axis_name) \
+                * svc_participation.safe_inv(count_p)
+        theta_next = jax.tree.map(
+            lambda p, u: p - cfg.alpha * u, theta, update)
+
+        returns = ys["returns"].reshape(
+            (nb * blk,) + ys["returns"].shape[2:])[:n_local]
+        r_local = -jnp.sum(jnp.where(mask_local[:, None], returns, 0.0))
+        reward = jax.lax.psum(r_local, axis_name) \
+            * svc_participation.safe_inv(count_p) / cfg.batch_m
+        grad_sq = tree_global_norm_sq(mean_grad)
+        if telemetry is None:
+            return theta_next, (reward, grad_sq, gain_mean)
+
+        norms_sq = ys["norms_sq"].reshape(-1)[:n_local] if want_norms \
+            else None
+        probes = _probes.sharded_streamed_round_probes(
+            telemetry, v=v_global, local_norms_sq=norms_sq,
+            valid_local=mask_local, ota_cfg=ota_cfg, n_agents=cfg.n_agents,
+            axis_name=axis_name,
+            param_dim=sum(int(p.size) for p in jax.tree.leaves(theta)),
+            gain_mean=gain_mean,
+            update_norm=jnp.sqrt(tree_global_norm_sq(update)))
+        probes = _probes.participation_probes(
+            telemetry, probes, rate_realized=count_p / cfg.n_agents,
+            rate_expected=svc_participation.expected_count(
+                part, cfg.n_agents) / cfg.n_agents)
+        return theta_next, (reward, grad_sq, gain_mean, probes)
+
     def round_fn(theta: PyTree, key: jax.Array):
         key_samp, key_chan = jax.random.split(key)
         agent_keys = jax.random.split(key_samp, cfg.n_agents)
@@ -512,7 +912,34 @@ def _make_agent_sharded_round_fn(
             check_rep=False,
         )(theta, agent_keys, lane_stacks, key_chan)
 
-    return round_fn
+    if part is None:
+        return round_fn
+
+    def service_round(state: ServiceState, key: jax.Array):
+        theta = state.theta
+        key_samp, key_chan = jax.random.split(key)
+        agent_keys = jax.random.split(key_samp, cfg.n_agents)
+        lane_stacks = dict(env.params) if hetero else {}
+        if pad_total:
+            agent_keys = ota.pad_agent_axis(agent_keys, pad_total)
+            lane_stacks = ota.pad_agent_axis(lane_stacks, pad_total)
+        stack_specs = jax.tree.map(lambda _: P(axis_name), lane_stacks)
+        metric_specs = (P(), P(), P())
+        if telemetry is not None:
+            metric_specs += (RoundTelemetry(P(), P(), P(), P(), P())._replace(
+                participation_rate=P(), participation_drift=P()),)
+        theta_next, metrics = shard_map(
+            local_round_streamed_svc, mesh=mesh,
+            in_specs=(P(), P(axis_name), stack_specs, P(), P(), P(), P()),
+            out_specs=(P(), metric_specs),
+            check_rep=False,
+        )(theta, agent_keys, lane_stacks, key_chan, state.round_idx,
+          state.part_key, state.sched_key)
+        state_next = state._replace(theta=theta_next,
+                                    round_idx=state.round_idx + 1)
+        return state_next, metrics
+
+    return service_round
 
 
 def run(
@@ -528,6 +955,8 @@ def run(
     ota_backend: str = "auto",
     telemetry: Optional[TelemetryConfig] = None,
     agent_blocks: Optional[int] = None,
+    participation: Optional[ParticipationConfig] = None,
+    staleness: Optional[StalenessConfig] = None,
 ):
     """Run K rounds; returns (theta_K, History).
 
@@ -539,22 +968,38 @@ def run(
     probes) fills ``History.telemetry`` with ``(K,)``-leaved round probes.
     ``agent_blocks`` streams the agent axis in blocked-scan chunks of that
     many agents — O(agent_blocks × d) peak memory, history bitwise-invariant
-    to the block size (see :func:`make_round_fn`).
+    to the block size (see :func:`make_round_fn`).  ``participation`` /
+    ``staleness`` run the rounds as *service* rounds (partial agent
+    participation, stale-gradient replay — see :mod:`repro.service`); a
+    config that normalises away (full participation, ``max_age=0``) emits
+    the byte-identical plain program.
     """
-    key_init, key_scan = jax.random.split(key)
-    theta = policy.init(key_init) if theta0 is None else theta0
+    part = svc_participation.normalize(participation, cfg.n_agents)
+    stale_cfg = svc_staleness.normalize(staleness, part)
     round_fn = make_round_fn(env, policy, cfg, ota,
                              agent_mesh=agent_mesh, agent_axis=agent_axis,
                              ota_backend=ota_backend, telemetry=telemetry,
-                             agent_blocks=agent_blocks)
+                             agent_blocks=agent_blocks,
+                             participation=part, staleness=stale_cfg)
+    if part is not None:
+        key_init, key_scan, key_svc = jax.random.split(key, 3)
+        theta = policy.init(key_init) if theta0 is None else theta0
+        state0 = svc_participation.init_state(theta, key_svc, cfg.n_agents,
+                                              stale_cfg)
+        keys = jax.random.split(key_scan, cfg.n_rounds)
+        state, metrics = jax.lax.scan(round_fn, state0, keys)
+        theta = state.theta
+    else:
+        key_init, key_scan = jax.random.split(key)
+        theta = policy.init(key_init) if theta0 is None else theta0
 
-    def body(carry, key_k):
-        theta = carry
-        theta, metrics = round_fn(theta, key_k)
-        return theta, metrics
+        def body(carry, key_k):
+            theta = carry
+            theta, metrics = round_fn(theta, key_k)
+            return theta, metrics
 
-    keys = jax.random.split(key_scan, cfg.n_rounds)
-    theta, metrics = jax.lax.scan(body, theta, keys)
+        keys = jax.random.split(key_scan, cfg.n_rounds)
+        theta, metrics = jax.lax.scan(body, theta, keys)
     if len(metrics) == 4:
         rewards, grad_sq, gain_mean, probes = metrics
         return theta, History(rewards=rewards, grad_sq=grad_sq,
@@ -584,23 +1029,26 @@ _CACHE_SIZE = 64
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _compiled_run(env, policy, cfg: FedPGConfig, ota_cfg, backend: str,
                   telemetry=None, agent_mesh=None, agent_axis: str = "agents",
-                  agent_blocks=None):
+                  agent_blocks=None, participation=None, staleness=None):
     return jax.jit(
         lambda k: run(env, policy, cfg, k, ota=ota_cfg, ota_backend=backend,
                       telemetry=telemetry, agent_mesh=agent_mesh,
-                      agent_axis=agent_axis, agent_blocks=agent_blocks))
+                      agent_axis=agent_axis, agent_blocks=agent_blocks,
+                      participation=participation, staleness=staleness))
 
 
 @functools.lru_cache(maxsize=_CACHE_SIZE)
 def _compiled_monte_carlo(env, policy, cfg: FedPGConfig, ota_cfg,
                           n_runs: int, backend: str, telemetry=None,
                           agent_mesh=None, agent_axis: str = "agents",
-                          agent_blocks=None):
+                          agent_blocks=None, participation=None,
+                          staleness=None):
     return jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota_cfg,
                       ota_backend=backend, telemetry=telemetry,
                       agent_mesh=agent_mesh, agent_axis=agent_axis,
-                      agent_blocks=agent_blocks)[1]))
+                      agent_blocks=agent_blocks,
+                      participation=participation, staleness=staleness)[1]))
 
 
 # every compiled-program cache in the package; other modules (e.g.
@@ -631,24 +1079,35 @@ def run_jit(env, policy, cfg: FedPGConfig, key, *, ota=None, theta0=None,
             ota_backend: str = "auto",
             telemetry: Optional[TelemetryConfig] = None,
             agent_mesh=None, agent_axis: str = "agents",
-            agent_blocks: Optional[int] = None):
+            agent_blocks: Optional[int] = None,
+            participation: Optional[ParticipationConfig] = None,
+            staleness: Optional[StalenessConfig] = None):
     """jit-compiled entry point (env/policy/cfgs are closure constants).
 
     Repeated calls with the same ``(env, policy, cfg, ota, ota_backend,
-    telemetry, agent_mesh, agent_axis, agent_blocks)`` reuse the compiled
-    program (``theta0`` is a pytree and cannot key a cache, so passing one
-    compiles fresh).  Caching needs every argument hashable: envs holding
-    jax arrays (e.g. ``TabularMDP``) take the uncached path.
+    telemetry, agent_mesh, agent_axis, agent_blocks, participation,
+    staleness)`` reuse the compiled program (``theta0`` is a pytree and
+    cannot key a cache, so passing one compiles fresh).  Caching needs
+    every argument hashable: envs holding jax arrays (e.g. ``TabularMDP``)
+    take the uncached path.  Participation/staleness configs are
+    *normalised* before keying, so a full-participation config hits the
+    same cache entry as ``None``.
     """
-    telemetry = _active_telemetry(telemetry)
+    participation = svc_participation.normalize(participation, cfg.n_agents)
+    staleness = svc_staleness.normalize(staleness, participation)
+    telemetry = _active_telemetry(telemetry, participation)
     if theta0 is None and _hashable(env, policy, cfg, ota, telemetry,
-                                    agent_mesh, agent_axis, agent_blocks):
+                                    agent_mesh, agent_axis, agent_blocks,
+                                    participation, staleness):
         return _compiled_run(env, policy, cfg, ota, ota_backend, telemetry,
-                             agent_mesh, agent_axis, agent_blocks)(key)
+                             agent_mesh, agent_axis, agent_blocks,
+                             participation, staleness)(key)
     fn = jax.jit(lambda k: run(env, policy, cfg, k, ota=ota, theta0=theta0,
                                ota_backend=ota_backend, telemetry=telemetry,
                                agent_mesh=agent_mesh, agent_axis=agent_axis,
-                               agent_blocks=agent_blocks))
+                               agent_blocks=agent_blocks,
+                               participation=participation,
+                               staleness=staleness))
     return fn(key)
 
 
@@ -663,25 +1122,32 @@ def monte_carlo(
     telemetry: Optional[TelemetryConfig] = None,
     agent_mesh=None, agent_axis: str = "agents",
     agent_blocks: Optional[int] = None,
+    participation: Optional[ParticipationConfig] = None,
+    staleness: Optional[StalenessConfig] = None,
 ):
     """n_runs independent repetitions (the paper uses 20): vmapped.
 
     Repeated calls with the same ``(env, policy, cfg, ota, n_runs,
-    ota_backend, telemetry, agent_mesh, agent_axis, agent_blocks)`` reuse
-    the compiled program; only the PRNG keys change between calls.  Caching
-    needs every argument hashable: envs holding jax arrays (e.g.
-    ``TabularMDP``) take the uncached path.
+    ota_backend, telemetry, agent_mesh, agent_axis, agent_blocks,
+    participation, staleness)`` reuse the compiled program; only the PRNG
+    keys change between calls.  Caching needs every argument hashable:
+    envs holding jax arrays (e.g. ``TabularMDP``) take the uncached path.
     """
-    telemetry = _active_telemetry(telemetry)
+    participation = svc_participation.normalize(participation, cfg.n_agents)
+    staleness = svc_staleness.normalize(staleness, participation)
+    telemetry = _active_telemetry(telemetry, participation)
     keys = jax.random.split(key, n_runs)
     if _hashable(env, policy, cfg, ota, telemetry, agent_mesh, agent_axis,
-                 agent_blocks):
+                 agent_blocks, participation, staleness):
         return _compiled_monte_carlo(env, policy, cfg, ota, n_runs,
                                      ota_backend, telemetry, agent_mesh,
-                                     agent_axis, agent_blocks)(keys)
+                                     agent_axis, agent_blocks,
+                                     participation, staleness)(keys)
     fn = jax.jit(jax.vmap(
         lambda k: run(env, policy, cfg, k, ota=ota,
                       ota_backend=ota_backend, telemetry=telemetry,
                       agent_mesh=agent_mesh, agent_axis=agent_axis,
-                      agent_blocks=agent_blocks)[1]))
+                      agent_blocks=agent_blocks,
+                      participation=participation,
+                      staleness=staleness)[1]))
     return fn(keys)

@@ -438,32 +438,54 @@ def effective_gain_mean(cfg: Optional[OTAConfig],
         return cfg.channel.mean
 
 
+def _participation_rescale(n_total: Scalar, n_eff: Scalar) -> Scalar:
+    """``n_total / n_eff`` — the round-service correction that retargets
+    the full-fleet normaliser ``1/(n_total * m_h)`` at the round's
+    effective contribution weight ``n_eff`` (realised participating count
+    or its closed-form expectation, possibly fractional under staleness
+    decay).  Exact zero at ``n_eff == 0``: an empty round must commit a
+    zero update, never the amplified bare noise draw."""
+    w = jnp.asarray(n_eff, jnp.float32)
+    return jnp.where(w > 0, n_total / jnp.where(w > 0, w, 1.0), 0.0)
+
+
 def _server_epilogue(
     cfg: OTAConfig,
     key_n: jax.Array,
     v: PyTree,
     n_total: Scalar,
     n_agents: Optional[int],
+    n_eff: Optional[Scalar] = None,
 ) -> PyTree:
     """The shared server-side tail of every xla aggregation form: AWGN on
     the summed signal, then the update normalisation ``update_scale`` or
     ``1 / (n_total * norm_const)``.  One copy keeps the equivalence-tested
-    forms from drifting apart."""
+    forms from drifting apart.  ``n_eff`` (round service) renormalises by
+    the effective contribution weight instead of the full fleet — see
+    :func:`_participation_rescale`; ``None`` leaves the historical scale
+    byte-identical."""
     if _noise_enabled(cfg.noise_sigma):
         noise = tree_normal_like(key_n, v, cfg.noise_sigma)
         v = jax.tree.map(jnp.add, v, noise)
     scale = cfg.update_scale
     if scale is None:
         scale = 1.0 / (n_total * cfg.norm_const_for(n_agents))
+    if n_eff is not None:
+        scale = scale * _participation_rescale(n_total, n_eff)
     return jax.tree.map(lambda x: x * scale, v)
 
 
 def _server_scale(cfg: OTAConfig, n_total: Scalar,
-                  n_agents: Optional[int]) -> Scalar:
+                  n_agents: Optional[int],
+                  n_eff: Optional[Scalar] = None) -> Scalar:
     """The epilogue's multiplicative constant, for backends that fuse it."""
     if cfg.update_scale is not None:
-        return cfg.update_scale
-    return 1.0 / (n_total * cfg.norm_const_for(n_agents))
+        scale = cfg.update_scale
+    else:
+        scale = 1.0 / (n_total * cfg.norm_const_for(n_agents))
+    if n_eff is not None:
+        scale = scale * _participation_rescale(n_total, n_eff)
+    return scale
 
 
 def _aggregate_stacked_xla(
@@ -757,13 +779,16 @@ def stream_finalize(
     n_agents: int,
     *,
     backend: str = "xla",
+    n_eff: Optional[Scalar] = None,
 ) -> PyTree:
     """Server tail over a streamed superposition: ONE AWGN draw + the
     debias normalisation.  On xla this is the shared `_server_epilogue`
     (the noise tensor is bitwise-identical to the unblocked form's — same
     ``key_n``, same shapes); on pallas it is one fused kernel pass over the
     flattened ``v`` with the counter PRNG (noise indexed by absolute flat
-    position, so it too is invariant to the agent blocking)."""
+    position, so it too is invariant to the agent blocking).  ``n_eff``
+    retargets the normaliser at the round service's effective
+    contribution weight (see :func:`_participation_rescale`)."""
     if backend == "pallas":
         from repro.kernels import ota_fused
 
@@ -771,12 +796,12 @@ def stream_finalize(
         u = ota_fused.fused_server_pass(
             flat,
             sigma=cfg.noise_sigma,
-            scale=_server_scale(cfg, n_agents, n_agents),
+            scale=_server_scale(cfg, n_agents, n_agents, n_eff),
             seed=_kernel_seed(key_n),
             with_noise=_noise_enabled(cfg.noise_sigma),
         )
         return unflatten(u)
-    return _server_epilogue(cfg, key_n, v, n_agents, n_agents)
+    return _server_epilogue(cfg, key_n, v, n_agents, n_agents, n_eff)
 
 
 def stream_finalize_apply(
@@ -788,6 +813,7 @@ def stream_finalize_apply(
     n_agents: int,
     *,
     backend: str = "xla",
+    n_eff: Optional[Scalar] = None,
 ) -> PyTree:
     """`stream_finalize` fused with the server SGD step
     ``theta' = theta - alpha * u`` (one kernel pass on pallas)."""
@@ -799,14 +825,14 @@ def stream_finalize_apply(
         p_next = ota_fused.fused_server_pass(
             flat,
             sigma=cfg.noise_sigma,
-            scale=_server_scale(cfg, n_agents, n_agents),
+            scale=_server_scale(cfg, n_agents, n_agents, n_eff),
             seed=_kernel_seed(key_n),
             with_noise=_noise_enabled(cfg.noise_sigma),
             alpha=alpha,
             params=pflat,
         )
         return punflatten(p_next)
-    u = _server_epilogue(cfg, key_n, v, n_agents, n_agents)
+    u = _server_epilogue(cfg, key_n, v, n_agents, n_agents, n_eff)
     return jax.tree.map(lambda p, x: p - alpha * x, params, u)
 
 

@@ -54,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import io
 import itertools
+import math
 import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -76,6 +77,10 @@ from repro.rl.envs import (
 )
 from repro.rl.envs import check_agent_count as check_env_agent_count
 from repro.rl.envs import default_policy as env_default_policy
+from repro.service import participation as svc_participation
+from repro.service import staleness as svc_staleness
+from repro.service.participation import ParticipationConfig
+from repro.service.staleness import StalenessConfig
 from repro.telemetry import trace as rtrace
 from repro.telemetry import probes as _probes
 from repro.telemetry.probes import RoundTelemetry, TelemetryConfig
@@ -128,6 +133,12 @@ class Scenario:
     # streaming round form: lax.scan over agent blocks (structural — it
     # changes the jaxpr, so it splits partitions; see fedpg.make_round_fn)
     agent_blocks: Optional[int] = None
+    # round-service axes (fedpg.run(participation=..., staleness=...)):
+    # the participation *kind*, debias mode, fault structure, and replay
+    # depth are structural; the Bernoulli rate, the fault deadline (under
+    # realized debias), and the age-decay batch as lanes
+    participation: Optional[ParticipationConfig] = None
+    staleness: Optional[StalenessConfig] = None
     env: Any = None
     policy: Any = None
     tag: str = ""  # free-form label carried into tables/CSV
@@ -186,6 +197,17 @@ class Scenario:
                 for f in dataclasses.fields(self.env)
             )
         pol = "" if self.policy is None else type(self.policy).__name__
+        pp = self.participation
+        part_kind = "" if pp is None else pp.kind
+        part_rate: Any = ""
+        if pp is not None:
+            part_rate = pp.rate if pp.kind == "bernoulli" else (
+                pp.subset if pp.kind == "subset" else "")
+        part_debias = "" if pp is None else pp.debias
+        faults = ""
+        if pp is not None and pp.faults is not None:
+            faults = "active" if pp.faults.active else "inactive"
+        st = self.staleness
         m_eff, v_eff = self.effective_moments()
         return {
             "tag": self.tag, "channel": chan, "channel_params": chan_params,
@@ -197,6 +219,10 @@ class Scenario:
             "debias": self.debias,
             "agent_blocks": "" if self.agent_blocks is None
             else self.agent_blocks,
+            "participation": part_kind, "participation_rate": part_rate,
+            "participation_debias": part_debias, "faults": faults,
+            "staleness_max_age": "" if st is None else st.max_age,
+            "staleness_decay": "" if st is None else st.decay,
             "env": env_tag, "env_params": env_params,
             "policy": pol, "m_h_eff": m_eff, "sigma_h2_eff": v_eff,
         }
@@ -300,6 +326,30 @@ def _workload_key(s: Scenario) -> Tuple:
     return env_tag, pol_tag
 
 
+def _service_key(s: Scenario) -> Tuple:
+    """The round-service part of the structure key.  Normalised first, so
+    a config that can never drop an agent shares its partition with plain
+    scenarios (byte-identical programs).  The Bernoulli ``rate``, the
+    fault ``deadline`` (realized debias only — the expected normaliser is
+    a host-side closed form over the deadline, so a traced deadline can't
+    feed it), and the staleness ``decay`` are continuous lane axes and
+    are sentinel-zeroed out of the key; everything else is structural."""
+    p = svc_participation.normalize(s.participation, s.n_agents)
+    if p is None:
+        return (None, None)
+    f = p.faults if (p.faults is not None and p.faults.active) else None
+    if f is None:
+        f_tag = None
+    else:
+        dl_tag = -1.0 if p.debias == "realized" else f.deadline
+        f_tag = (f.stragglers, dl_tag, f.crashes)
+    rate_tag = -1.0 if p.kind == "bernoulli" else 0.0
+    p_tag = (p.kind, rate_tag, p.subset, p.debias, f_tag)
+    st = svc_staleness.normalize(s.staleness, p)
+    st_tag = None if st is None else (st.max_age, -1.0)
+    return (p_tag, st_tag)
+
+
 def _structure_key(s: Scenario) -> Tuple:
     """Everything that changes the trace shape or the computation graph."""
     if s.channel is None:
@@ -307,11 +357,12 @@ def _structure_key(s: Scenario) -> Tuple:
         # them so equivalent exact scenarios share one partition/compile.
         return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
                 s.estimator, False, None, None, False,
-                s.agent_blocks) + _workload_key(s)
+                s.agent_blocks) + _service_key(s) + _workload_key(s)
     pc = None if s.power_control is None else type(s.power_control).__name__
     return (s.n_agents, s.batch_m, s.horizon, s.gamma, s.n_rounds,
             s.estimator, s.debias, _channel_tag(s.channel), pc,
-            s.noise_sigma > 0.0, s.agent_blocks) + _workload_key(s)
+            s.noise_sigma > 0.0, s.agent_blocks) + _service_key(s) \
+        + _workload_key(s)
 
 
 @dataclass
@@ -397,6 +448,29 @@ def _pack_partition(part: Partition) -> Dict[str, Any]:
                 1.0 / (s.n_agents * _norm_const64(s))
                 for s in part.scenarios
             ])
+    # round-service lane axes: structure keying guarantees every scenario
+    # here normalises to the same shape as the prototype, so only the
+    # continuous knobs can differ
+    p0 = svc_participation.normalize(part.proto.participation,
+                                     part.proto.n_agents)
+    if p0 is not None:
+        parts_n = [svc_participation.normalize(s.participation, s.n_agents)
+                   for s in part.scenarios]
+        if p0.kind == "bernoulli":
+            rates = [float(p.rate) for p in parts_n]
+            if values_vary(rates):
+                packed["participation_rate"] = f32(rates)
+        if p0.debias == "realized" and p0.faults is not None \
+                and p0.faults.active:
+            deadlines = [float(p.faults.deadline) for p in parts_n]
+            if values_vary(deadlines):
+                packed["participation_deadline"] = f32(deadlines)
+        st0 = svc_staleness.normalize(part.proto.staleness, p0)
+        if st0 is not None:
+            decays = [float(svc_staleness.normalize(s.staleness, pn).decay)
+                      for s, pn in zip(part.scenarios, parts_n)]
+            if values_vary(decays):
+                packed["staleness_decay"] = f32(decays)
     return packed
 
 
@@ -430,6 +504,12 @@ def _make_lane(env, policy, part: Partition,
                if proto.env is not None and part.varying("env")
                else None)
     pc_type = None if proto.power_control is None else type(proto.power_control)
+    # normalised prototype service configs: constant partitions close over
+    # them whole (same literals as the per-scenario path); varying knobs
+    # are re-injected as traced lane scalars below
+    proto_part = svc_participation.normalize(proto.participation,
+                                             proto.n_agents)
+    proto_stale = svc_staleness.normalize(proto.staleness, proto_part)
 
     def lane(packed: Dict[str, Any], keys: jax.Array) -> History:
         env_l = lane_env
@@ -450,10 +530,21 @@ def _make_lane(env, policy, part: Partition,
                 ota = replace(ota, power_control=pc_type(**packed["power_control"]))
             if "update_scale" in packed:
                 ota = replace(ota, update_scale=packed["update_scale"])
+        part_l = proto_part
+        if "participation_rate" in packed:
+            part_l = replace(part_l, rate=packed["participation_rate"])
+        if "participation_deadline" in packed:
+            part_l = replace(part_l, faults=replace(
+                part_l.faults, deadline=packed["participation_deadline"]))
+        stale_l = proto_stale
+        if "staleness_decay" in packed:
+            stale_l = replace(stale_l, decay=packed["staleness_decay"])
         return jax.vmap(
             lambda k: fedpg.run(env_l, lane_policy, cfg, k, ota=ota,
                                 telemetry=telemetry,
-                                agent_blocks=proto.agent_blocks)[1]
+                                agent_blocks=proto.agent_blocks,
+                                participation=part_l,
+                                staleness=stale_l)[1]
         )(keys)
 
     return lane
@@ -729,8 +820,15 @@ def sweep(
         rewards=_stack_histories([h.rewards for h in out_hist]),
         grad_sq=_stack_histories([h.grad_sq for h in out_hist]),
         gain_mean=_stack_histories([h.gain_mean for h in out_hist]),
+        # per-field None guard: the service probe fields (participation
+        # rate/drift, staleness age) exist only for service partitions —
+        # a mixed sweep keeps the common probes stacked and drops a
+        # service-only field unless every scenario carries it
         telemetry=None if out_hist[0].telemetry is None else RoundTelemetry(
-            *(_stack_histories([getattr(h.telemetry, f) for h in out_hist])
+            *((None if any(getattr(h.telemetry, f) is None
+                           for h in out_hist)
+               else _stack_histories([getattr(h.telemetry, f)
+                                      for h in out_hist]))
               for f in RoundTelemetry._fields)),
     )
     return SweepResult(scenarios=scenarios, history=history, partitions=parts,

@@ -1,0 +1,52 @@
+"""repro.service — the asynchronous round service.
+
+The paper's Algorithm 2 is fully synchronous: every agent broadcasts in
+every round.  This package relaxes that into a *round service* with
+partial, stale, and faulty agent participation, while preserving the
+repo's core contracts (debias normalisation, bitwise block/shard
+invariance, byte-identical programs when a feature is off):
+
+* :mod:`repro.service.participation` — in-jit per-round participation
+  masks (Bernoulli / deterministic round-robin subset), counter-PRNG
+  keyed on ``(round, agent_id)`` so the realised mask is bitwise
+  reproducible and invariant to ``agent_blocks``/``agent_mesh``
+  partitioning, plus the realised/expected debias normalisers.
+* :mod:`repro.service.staleness` — a bounded stale-gradient replay
+  buffer carried through the round scan (absolute-agent-indexed,
+  age-decay weighted).
+* :mod:`repro.service.faults` — straggler delay distributions, a round
+  deadline that closes the uplink, and crash/rejoin schedules; all
+  declaratively configured and sweep-packable.
+* :mod:`repro.service.driver` — the host-side continuous service
+  (:class:`~repro.service.driver.RoundService`) wrapping the jitted
+  service rounds from ``fedpg.make_round_fn``: segment commits,
+  wall-clock round deadlines, checkpoint/resume, ledger telemetry.
+  (``RoundService``/``ServiceConfig`` re-export lazily from here — the
+  driver pulls in ``repro.core.fedpg``, which imports this package's
+  config submodules, so an eager import would cycle.)
+
+The in-jit pieces thread through ``fedpg.run(participation=...,
+staleness=...)`` — see :func:`repro.core.fedpg.make_round_fn`.
+"""
+from repro.service.faults import (  # noqa: F401
+    CrashSchedule, FaultConfig, StragglerModel,
+)
+from repro.service.participation import (  # noqa: F401
+    ParticipationConfig, ServiceState,
+)
+from repro.service.staleness import StalenessConfig, StaleState  # noqa: F401
+
+__all__ = [
+    "CrashSchedule", "FaultConfig", "ParticipationConfig", "RoundService",
+    "ServiceConfig", "ServiceState", "StalenessConfig", "StaleState",
+    "StragglerModel",
+]
+
+_DRIVER_EXPORTS = ("RoundService", "ServiceConfig")
+
+
+def __getattr__(name):
+    if name in _DRIVER_EXPORTS:
+        from repro.service import driver
+        return getattr(driver, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,175 @@
+"""Declarative fault injection for the round service.
+
+Three failure modes, composed into one per-round availability mask that
+multiplies the participation mask (see ``service.participation``):
+
+* **Stragglers** — each agent draws an upload delay from a configured
+  distribution (exponential or Pareto/Lomax tail); the round's deadline
+  closure commits with whoever made the deadline (``delay <= deadline``),
+  the OTA analog of timeout/partial aggregation.
+* **Crashes** — a configured fraction of agents follows a periodic
+  crash/rejoin schedule (down for ``down`` out of every ``period``
+  rounds, with a per-agent phase so outages are staggered).
+* **Deadline** — ``math.inf`` disables closure (every straggler
+  eventually makes it, i.e. stragglers alone change nothing).
+
+Everything is a frozen, hashable dataclass so fault configs can join
+compiled-program cache keys and sweep-lane structure keys, and every
+random draw is a counter-PRNG ``fold_in`` on ``(round, agent_id)`` —
+bitwise reproducible and invariant to agent blocking/sharding.  The
+closed-form per-round availability probability (:meth:`FaultConfig.
+availability`) feeds the ``expected_n`` debias normaliser.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CrashSchedule", "FaultConfig", "StragglerModel"]
+
+
+@dataclass(frozen=True)
+class StragglerModel:
+    """Per-(round, agent) upload-delay distribution.
+
+    ``dist="exp"`` draws ``Exp(mean)``; ``dist="pareto"`` draws a
+    Lomax(shape) tail scaled so the mean is ``mean`` (requires
+    ``shape > 1``) — the heavy-tailed regime where a deadline actually
+    bites.  Both are inverse-CDF transforms of one uniform draw, so the
+    delay stream is pure counter-PRNG.
+    """
+
+    dist: str = "exp"        # "exp" | "pareto"
+    mean: float = 1.0        # mean delay (same unit as the deadline)
+    shape: float = 2.5       # Lomax tail index (pareto only)
+
+    def __post_init__(self):
+        if self.dist not in ("exp", "pareto"):
+            raise ValueError(f"unknown straggler dist {self.dist!r}")
+        if self.mean <= 0:
+            raise ValueError("straggler mean delay must be > 0")
+        if self.dist == "pareto" and self.shape <= 1:
+            raise ValueError("pareto straggler needs shape > 1 for a "
+                             "finite mean delay")
+
+    def _scale(self) -> float:
+        # Lomax mean = scale / (shape - 1)
+        return self.mean * (self.shape - 1.0)
+
+    def delays(self, u: jax.Array) -> jax.Array:
+        """Inverse-CDF transform of uniform draws ``u`` in [0, 1)."""
+        if self.dist == "exp":
+            return -self.mean * jnp.log1p(-u)
+        return self._scale() * (jnp.power(1.0 - u, -1.0 / self.shape) - 1.0)
+
+    def prob_within(self, deadline: float) -> float:
+        """Closed-form ``P(delay <= deadline)``."""
+        if not math.isfinite(deadline):
+            return 1.0
+        if self.dist == "exp":
+            return 1.0 - math.exp(-deadline / self.mean)
+        return 1.0 - (1.0 + deadline / self._scale()) ** (-self.shape)
+
+
+@dataclass(frozen=True)
+class CrashSchedule:
+    """Periodic crash/rejoin: a ``frac`` subset of agents is down for
+    ``down`` out of every ``period`` rounds.  Which agents crash (one
+    uniform per agent) and their outage phase (one ``fold_in`` per agent)
+    are drawn from the round-independent schedule key, so an agent's
+    crash windows are fixed for the whole run — crash, then rejoin."""
+
+    frac: float = 0.1        # fraction of the fleet that ever crashes
+    period: int = 10         # schedule period in rounds
+    down: int = 1            # rounds spent down per period
+
+    def __post_init__(self):
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError("crash frac must be in [0, 1]")
+        if self.period < 1 or not 0 <= self.down <= self.period:
+            raise ValueError("need 0 <= down <= period and period >= 1")
+
+    def up_mask(self, sched_key: jax.Array, round_idx: jax.Array,
+                agent_ids: jax.Array) -> jax.Array:
+        """(len(agent_ids),) bool — True where the agent is up this round."""
+        def agent_up(i):
+            k = jax.random.fold_in(sched_key, i)
+            k_sel, k_phase = jax.random.split(k)
+            crashes = jax.random.uniform(k_sel) < self.frac
+            phase = jax.random.randint(k_phase, (), 0, self.period)
+            in_outage = ((round_idx + phase) % self.period) < self.down
+            return jnp.logical_not(jnp.logical_and(crashes, in_outage))
+
+        return jax.vmap(agent_up)(agent_ids)
+
+    def up_prob(self) -> float:
+        """Closed-form per-round ``P(agent is up)``."""
+        return 1.0 - self.frac * (self.down / self.period)
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Composed fault model for one service run (hashable, declarative).
+
+    ``deadline`` is the round-closure deadline applied to straggler
+    delays; ``math.inf`` (the default) never closes a round early.
+    """
+
+    stragglers: Optional[StragglerModel] = None
+    deadline: float = math.inf
+    crashes: Optional[CrashSchedule] = None
+
+    def __post_init__(self):
+        if isinstance(self.deadline, (int, float)) and self.deadline < 0:
+            raise ValueError("deadline must be >= 0")
+
+    @property
+    def active(self) -> bool:
+        """Whether this config can ever drop an agent.  Stragglers without
+        a finite deadline never do; a zero-fraction crash schedule never
+        does.  An inactive config normalises the whole fault path away."""
+        # a traced deadline (packed sweep lane) is not statically infinite:
+        # keep the fault path active so the program shape matches the lane
+        statically_inf = isinstance(self.deadline, (int, float)) \
+            and math.isinf(self.deadline)
+        straggle = self.stragglers is not None and not statically_inf
+        crash = self.crashes is not None and self.crashes.frac > 0 \
+            and self.crashes.down > 0
+        return bool(straggle or crash)
+
+    def availability(self) -> float:
+        """Closed-form per-round ``P(agent contributes)`` under this fault
+        model (delays and crash schedules are independent) — the factor the
+        ``expected_n`` debias normaliser multiplies in."""
+        p = 1.0
+        if self.stragglers is not None:
+            try:
+                p *= self.stragglers.prob_within(float(self.deadline))
+            except TypeError:  # traced deadline (sweep lane): no closed form
+                pass
+        if self.crashes is not None:
+            p *= self.crashes.up_prob()
+        return p
+
+    def up_mask(self, delay_key: jax.Array, sched_key: jax.Array,
+                round_idx: jax.Array, agent_ids: jax.Array) -> jax.Array:
+        """(len(agent_ids),) bool availability this round: made the
+        deadline AND not in a crash outage.  ``delay_key`` is the
+        round-folded key (fresh delays each round); ``sched_key`` is the
+        run-wide schedule key (fixed crash windows)."""
+        up = jnp.ones(agent_ids.shape, bool)
+        if self.stragglers is not None:
+            def agent_delay(i):
+                return jax.random.uniform(jax.random.fold_in(delay_key, i))
+
+            u = jax.vmap(agent_delay)(agent_ids)
+            up = jnp.logical_and(up,
+                                 self.stragglers.delays(u) <= self.deadline)
+        if self.crashes is not None:
+            up = jnp.logical_and(
+                up, self.crashes.up_mask(sched_key, round_idx, agent_ids))
+        return up

@@ -1,0 +1,216 @@
+"""In-jit participation semantics for the round service.
+
+The paper's Algorithm 2 assumes every agent broadcasts in every round;
+the service relaxes that to a *participation mask* drawn per round and
+re-normalises the OTA update so the effective-moment contract
+(``ota.effective_gain_mean``) is preserved:
+
+* **Masks** are pure counter-PRNG: the run-wide ``part_key`` is
+  ``fold_in``-ed with the round index, then per-agent draws ``fold_in``
+  the ABSOLUTE agent id — so the mask for ``(round, agent)`` is bitwise
+  reproducible and invariant to ``agent_blocks`` blocking and
+  ``agent_mesh`` sharding (the same derivation scheme as
+  ``ota.sharded_stream_gains``).  ``kind="bernoulli"`` draws each agent
+  independently with probability ``rate``; ``kind="subset"`` is the
+  deterministic round-robin window of ``subset`` agents (no PRNG at
+  all); faults (:mod:`repro.service.faults`) AND into either.
+* **Debias normalisers**: the full-fleet update is ``(sum_i h_i g_i +
+  n) / (N * m_h)``; with ``W`` the round's total contribution weight
+  (participating count plus any staleness replay weight), the service
+  multiplies by ``N / W`` so the committed update is normalised by the
+  *realised* participation (``debias="realized"``) — an exact-zero
+  update when nobody makes the round, never an amplified noise draw —
+  or by the closed-form ``E[W]`` (``debias="expected"``), the variant
+  matching the paper-style analysis where the normaliser is a constant.
+
+A config that can never drop an agent (``kind="full"``, or a static
+Bernoulli ``rate >= 1`` with no active faults) normalises to ``None``
+and the emitted program is byte-identical to the plain ``fedpg.run``
+round — the same bitwise-off contract telemetry follows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.service.faults import FaultConfig
+
+PyTree = Any
+
+__all__ = [
+    "ParticipationConfig", "ServiceState", "expected_count", "init_state",
+    "mask_agent_axis", "normalize", "participation_factor", "round_mask",
+    "safe_inv", "scale_jaxpr",
+]
+
+
+@dataclass(frozen=True)
+class ParticipationConfig:
+    """Static (hashable) participation model; joins compiled-cache keys
+    and sweep structure keys.  ``rate`` (bernoulli) may be a traced
+    sweep-lane value; every other field is structural."""
+
+    kind: str = "bernoulli"      # "bernoulli" | "subset" | "full"
+    rate: float = 1.0            # Bernoulli participation probability
+    subset: int = 0              # round-robin window size (kind="subset")
+    debias: str = "realized"     # "realized" | "expected"
+    faults: Optional[FaultConfig] = None
+
+    def __post_init__(self):
+        if self.kind not in ("bernoulli", "subset", "full"):
+            raise ValueError(f"unknown participation kind {self.kind!r}")
+        if self.debias not in ("realized", "expected"):
+            raise ValueError(f"unknown debias mode {self.debias!r}")
+        if self.kind == "subset" and self.subset < 1:
+            raise ValueError("kind='subset' needs subset >= 1")
+        if self.kind == "bernoulli" and isinstance(self.rate, (int, float)) \
+                and not 0.0 < self.rate <= 1.0:
+            raise ValueError("bernoulli rate must be in (0, 1]")
+
+
+class ServiceState(NamedTuple):
+    """The round-scan carry of a service run.  ``round_idx`` is the
+    absolute round counter (checkpointable: a resumed service replays the
+    identical mask stream); ``part_key`` seeds the per-round mask draws,
+    ``sched_key`` the round-independent fault schedules; ``stale`` is the
+    staleness buffer (:class:`repro.service.staleness.StaleState`) or
+    None."""
+
+    theta: PyTree
+    round_idx: jax.Array               # () int32
+    part_key: jax.Array
+    sched_key: jax.Array
+    stale: Optional[Any] = None
+
+
+def normalize(participation: Optional[ParticipationConfig],
+              n_agents: int) -> Optional[ParticipationConfig]:
+    """Normalise: a config that can never drop an agent is
+    participation-off (the emitted program must be byte-identical to
+    ``participation=None``) — the telemetry ``_active_telemetry``
+    contract, applied to participation."""
+    p = participation
+    if p is None:
+        return None
+    faulty = p.faults is not None and p.faults.active
+    if faulty:
+        return p
+    if p.kind == "full":
+        return None
+    if p.kind == "bernoulli" and isinstance(p.rate, (int, float)) \
+            and p.rate >= 1.0:
+        return None
+    if p.kind == "subset" and p.subset >= n_agents:
+        return None
+    return p
+
+
+def init_state(theta: PyTree, key_svc: jax.Array, n_agents: int,
+               staleness=None) -> ServiceState:
+    """Fresh service state at round 0.  ``staleness`` is a normalised
+    :class:`~repro.service.staleness.StalenessConfig` (or None)."""
+    part_key, sched_key = jax.random.split(key_svc)
+    stale = None
+    if staleness is not None:
+        from repro.service import staleness as _staleness
+
+        stale = _staleness.init_state(staleness, theta, n_agents)
+    return ServiceState(theta=theta,
+                        round_idx=jnp.zeros((), jnp.int32),
+                        part_key=part_key, sched_key=sched_key, stale=stale)
+
+
+def round_mask(p: ParticipationConfig, part_key: jax.Array,
+               sched_key: jax.Array, round_idx: jax.Array,
+               agent_ids: jax.Array, n_agents: int) -> jax.Array:
+    """(len(agent_ids),) bool participation mask for one round.
+
+    ``agent_ids`` are ABSOLUTE agent indices — a shard or block passes
+    its slice of ``arange(N)`` and gets exactly the rows of the full
+    fleet's mask, which is what makes the mask block/shard invariant.
+    """
+    k_round = jax.random.fold_in(part_key, round_idx)
+    k_bern, k_delay = jax.random.split(k_round)
+    if p.kind == "bernoulli":
+        def agent_draw(i):
+            return jax.random.uniform(jax.random.fold_in(k_bern, i))
+
+        mask = jax.vmap(agent_draw)(agent_ids) < p.rate
+    elif p.kind == "subset":
+        w = min(int(p.subset), n_agents)
+        # round-robin window over absolute ids: exactly w participants,
+        # rotating by w each round — deterministic, PRNG-free
+        offset = (round_idx.astype(jnp.int32) * w) % n_agents
+        mask = ((agent_ids.astype(jnp.int32) - offset) % n_agents) < w
+    else:  # "full": only faults can drop agents
+        mask = jnp.ones(agent_ids.shape, bool)
+    if p.faults is not None and p.faults.active:
+        mask = jnp.logical_and(
+            mask, p.faults.up_mask(k_delay, sched_key, round_idx, agent_ids))
+    return mask
+
+
+def expected_count(p: ParticipationConfig, n_agents: int):
+    """Closed-form ``E[participating count]`` — the ``expected_n`` debias
+    normaliser.  Traced when ``rate`` is a packed sweep-lane value."""
+    if p.kind == "bernoulli":
+        base = p.rate * n_agents
+    elif p.kind == "subset":
+        base = float(min(int(p.subset), n_agents))
+    else:
+        base = float(n_agents)
+    if p.faults is not None and p.faults.active:
+        base = base * p.faults.availability()
+    return base
+
+
+def safe_inv(w):
+    """``1/w`` with an exact-zero result at ``w == 0``: an empty round
+    contributes an exact-zero term instead of NaN/inf."""
+    w = jnp.asarray(w, jnp.float32)
+    return jnp.where(w > 0, 1.0 / jnp.where(w > 0, w, 1.0), 0.0)
+
+
+def participation_factor(n_agents: int, w_norm):
+    """The ``N / W`` rescale that turns the full-fleet normaliser
+    ``1/(N * m_h)`` into the participation normaliser ``1/(W * m_h)``;
+    exact zero when ``W == 0`` so an empty round commits a zero update
+    (the round's AWGN draw is discarded, never amplified)."""
+    return n_agents * safe_inv(w_norm)
+
+
+def mask_agent_axis(tree: PyTree, mask: jax.Array) -> PyTree:
+    """Mask leading-axis rows to exact zeros (phantom-agent style)."""
+    return jax.tree.map(
+        lambda g: jnp.where(
+            mask.reshape((-1,) + (1,) * (g.ndim - 1)),
+            g, jnp.zeros_like(g)),
+        tree)
+
+
+def scale_jaxpr(p: ParticipationConfig, *, n_agents: int = 8):
+    """Trace the round's debias normaliser for structural inspection.
+
+    Returns the ClosedJaxpr of ``key -> N / W`` where ``W`` is the
+    round's contribution weight under config ``p``.  This is the hook the
+    ``participation-contract`` analyze check walks: with
+    ``debias="realized"`` the key invar must be LIVE (the normaliser is
+    data-dependent on the drawn mask — constant-folding it would silently
+    revert to the expected-count analysis), with ``debias="expected"``
+    the key invar must be DEAD (the normaliser is the closed form and
+    must NOT consume the realisation).
+    """
+    def factor(key):
+        if p.debias == "expected":
+            return participation_factor(n_agents, expected_count(p, n_agents))
+        part_key, sched_key = jax.random.split(key)
+        ids = jnp.arange(n_agents, dtype=jnp.int32)
+        mask = round_mask(p, part_key, sched_key,
+                          jnp.zeros((), jnp.int32), ids, n_agents)
+        return participation_factor(n_agents,
+                                    jnp.sum(mask.astype(jnp.float32)))
+
+    return jax.make_jaxpr(factor)(jax.random.key(0))

@@ -1,0 +1,139 @@
+"""Bounded stale-gradient replay buffer, carried through the round scan.
+
+When an agent misses a round (participation mask off), the server can
+replay its **last contributed gradient** — kept in an ``(N, d)`` buffer
+indexed by ABSOLUTE agent id, like ``HeterogeneousBudget`` — with an
+age-decay weight ``decay ** (age - 1)`` as long as the copy is at most
+``max_age`` rounds old.  Replayed terms are server-side memory: they
+enter the update *after* the OTA uplink (no channel gain, no fresh
+noise), normalised by the same total contribution weight ``W`` as the
+fresh participants (see ``service.participation``).
+
+Age convention: entering round ``k``, ``age[i]`` is the number of
+rounds since agent ``i`` last contributed — ``1`` means "contributed
+last round" (replay weight ``decay**0 = 1``), ``AGE_NEVER`` means never
+(row is all zeros and must not replay).  After the round, participants
+reset to ``1`` and everyone else ages by one (saturating).
+
+All replay weights and age statistics are computed from the ``(N,)``
+mask/age vectors *before* the block scan, and the buffer-sum fold uses
+the same strict sequential ``ota.stream_fold_block`` as the uplink — so
+the streamed (``agent_blocks``) form is bitwise invariant to the block
+size, including padded non-dividing fleets (phantom rows carry weight
+zero and fold exact zeros).  The O(N × d) buffer itself is inherent
+carried state — the same asymmetry the event-triggered baseline
+documents.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["AGE_NEVER", "StaleState", "StalenessConfig", "advance",
+           "init_state", "normalize", "replay_sum_stacked",
+           "replay_weights", "stats"]
+
+# saturation value for "never contributed" (and the age cap): far above
+# any usable max_age, small enough that age + 1 can never overflow int32
+AGE_NEVER = jnp.int32(2 ** 30)
+
+
+@dataclass(frozen=True)
+class StalenessConfig:
+    """Static (hashable) replay policy.  ``max_age=0`` disables replay
+    entirely (normalises to None); ``decay`` may be a traced sweep-lane
+    value."""
+
+    max_age: int = 0         # replay copies at most this many rounds old
+    decay: float = 1.0       # age-decay weight: w(age) = decay**(age - 1)
+
+    def __post_init__(self):
+        if self.max_age < 0:
+            raise ValueError("max_age must be >= 0")
+        if isinstance(self.decay, (int, float)) \
+                and not 0.0 <= self.decay <= 1.0:
+            raise ValueError("decay must be in [0, 1]")
+
+
+def normalize(staleness: Optional[StalenessConfig],
+              participation=None) -> Optional[StalenessConfig]:
+    """``max_age=0`` is staleness-off; so is any staleness without active
+    participation (no agent ever misses a round, the buffer would never
+    replay) — the program must be byte-identical to ``staleness=None``."""
+    if staleness is None or staleness.max_age < 1:
+        return None
+    if participation is None:
+        return None
+    return staleness
+
+
+class StaleState(NamedTuple):
+    """(N, d)-buffered last contributions + (N,) int32 ages."""
+
+    grads: PyTree       # leading axis N, absolute agent order
+    age: jax.Array      # (N,) int32; AGE_NEVER until first contribution
+
+
+def init_state(scfg: StalenessConfig, theta: PyTree,
+               n_agents: int) -> StaleState:
+    grads = jax.vmap(
+        lambda _: jax.tree.map(jnp.zeros_like, theta))(
+            jnp.arange(n_agents))
+    return StaleState(grads=grads,
+                      age=jnp.full((n_agents,), AGE_NEVER, jnp.int32))
+
+
+def replay_weights(scfg: StalenessConfig, mask: jax.Array,
+                   age: jax.Array) -> jax.Array:
+    """(N,) float32 replay weight per agent this round: exact zero for
+    participants, too-old copies and never-contributed rows; otherwise
+    ``decay ** (age - 1)``."""
+    replay = jnp.logical_and(
+        jnp.logical_not(mask),
+        jnp.logical_and(age >= 1, age <= scfg.max_age))
+    a = jnp.clip(age, 1, scfg.max_age).astype(jnp.float32)
+    w = jnp.power(jnp.asarray(scfg.decay, jnp.float32), a - 1.0)
+    return jnp.where(replay, w, 0.0)
+
+
+def advance(scfg: StalenessConfig, state: StaleState, mask: jax.Array,
+            fresh_grads: PyTree) -> StaleState:
+    """Post-round buffer update (stacked form): participants' rows take
+    their fresh gradient at age 1, everyone else ages by one round."""
+    keep = jax.tree.map(
+        lambda new, old: jnp.where(
+            mask.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+        fresh_grads, state.grads)
+    age = jnp.where(mask, jnp.int32(1),
+                    jnp.minimum(state.age + 1, AGE_NEVER))
+    return StaleState(grads=keep, age=age)
+
+
+def replay_sum_stacked(state: StaleState, weights: jax.Array) -> PyTree:
+    """``sum_i w_i * S_i`` over the stacked buffer (the batched-sum
+    association, matching the stacked round's uplink combine)."""
+    def _combine(s):
+        wb = weights.reshape((-1,) + (1,) * (s.ndim - 1)).astype(s.dtype)
+        return jnp.sum(wb * s, axis=0)
+
+    return jax.tree.map(_combine, state.grads)
+
+
+def stats(scfg: StalenessConfig, mask: jax.Array,
+          age: jax.Array):
+    """(total replay weight, replayed count, mean replayed age) scalars —
+    all derived from the pre-scan (N,) vectors, so every round form
+    (stacked, streamed, sharded) computes them identically."""
+    w = replay_weights(scfg, mask, age)
+    replayed = w > 0
+    cnt = jnp.sum(replayed.astype(jnp.float32))
+    from repro.service.participation import safe_inv
+
+    mean_age = jnp.sum(jnp.where(replayed, age, 0).astype(jnp.float32)) \
+        * safe_inv(cnt)
+    return jnp.sum(w), cnt, mean_age

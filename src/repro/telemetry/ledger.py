@@ -92,6 +92,14 @@ class Ledger:
             yield
         self.event("compiles", label=label, count=c.count)
 
+    def log_service(self, **payload: Any) -> None:
+        """One ``service`` event per round-service commit
+        (``repro.service.driver.RoundService``): the commit's round range,
+        mean reward / grad-sq / gain, the realised participation rate and
+        debias drift, and — when staleness replay is on — the live buffer's
+        age histogram."""
+        self.event("service", **payload)
+
     def log_sweep(self, result, *, constants=None, V: Optional[float] = None,
                   label: str = "") -> None:
         """Per-scenario records for one ``SweepResult``.

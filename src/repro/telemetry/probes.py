@@ -49,9 +49,9 @@ def _ota():
     return ota
 
 
-__all__ = ["RoundTelemetry", "TelemetryConfig", "sharded_round_probes",
-           "sharded_streamed_round_probes", "stacked_round_probes",
-           "streamed_round_probes"]
+__all__ = ["RoundTelemetry", "TelemetryConfig", "participation_probes",
+           "sharded_round_probes", "sharded_streamed_round_probes",
+           "stacked_round_probes", "streamed_round_probes", "summarize"]
 
 
 @dataclass(frozen=True)
@@ -68,9 +68,15 @@ class TelemetryConfig:
     grad_norms: bool = True
     moment_drift: bool = True
     dispersion: bool = True
+    participation: bool = True
 
     @property
     def active(self) -> bool:
+        # deliberately excludes ``participation``: the service probes only
+        # exist when a ParticipationConfig is active on the run, so the
+        # flag alone must not activate telemetry (an all-base-off config
+        # stays bitwise-off on every non-service run; ``fedpg`` treats the
+        # flag as active exactly when a service round can feed it)
         return self.snr or self.grad_norms or self.moment_drift \
             or self.dispersion
 
@@ -78,13 +84,24 @@ class TelemetryConfig:
 class RoundTelemetry(NamedTuple):
     """Per-round probe outputs (float32 scalars inside the round; stacked
     to ``(K,)`` by the scan, ``(mc, K)`` by monte-carlo, ``(S, mc, K)`` by
-    the sweep engine).  Disabled probes hold NaN."""
+    the sweep engine).  Disabled probes hold NaN.
+
+    The three service probes (``participation_rate``,
+    ``participation_drift``, ``staleness_mean``) default to ``None`` —
+    an *absent* pytree node, not a NaN leaf — so every run without an
+    active :class:`~repro.service.participation.ParticipationConfig`
+    emits the exact pre-service telemetry pytree (golden traces and scan
+    output structures are unchanged).  They hold arrays only when the
+    round service attaches them via :func:`participation_probes`."""
 
     snr: jax.Array
     grad_norm_pre: jax.Array
     grad_norm_post: jax.Array
     moment_drift: jax.Array
     dispersion: jax.Array
+    participation_rate: Optional[jax.Array] = None   # realised count / N
+    participation_drift: Optional[jax.Array] = None  # realised - expected rate
+    staleness_mean: Optional[jax.Array] = None       # mean replayed age
 
 
 def _nan() -> jax.Array:
@@ -314,16 +331,53 @@ def sharded_streamed_round_probes(
                           dispersion=disp)
 
 
+def participation_probes(
+    config: TelemetryConfig,
+    base: RoundTelemetry,
+    *,
+    rate_realized: jax.Array,
+    rate_expected,
+    staleness_mean: Optional[jax.Array] = None,
+) -> RoundTelemetry:
+    """Attach the round-service probes to a base :class:`RoundTelemetry`.
+
+    Called only from service rounds (an active ``ParticipationConfig``):
+    ``rate_realized`` is the realised participating fraction
+    ``count / N``, ``rate_expected`` the closed-form expectation (possibly
+    a traced sweep-lane value) — their difference is the realised-vs-
+    expected debias drift.  ``staleness_mean`` is the mean age of the
+    replayed stale contributions (None when staleness is off: the field
+    stays an absent node).  With ``config.participation`` off the fields
+    are NaN (present but disabled), keeping the service pytree static
+    across probe selections.
+    """
+    if not config.participation:
+        sm = None if staleness_mean is None else _nan()
+        return base._replace(participation_rate=_nan(),
+                             participation_drift=_nan(),
+                             staleness_mean=sm)
+    rate = rate_realized.astype(jnp.float32)
+    drift = (rate - jnp.asarray(rate_expected, jnp.float32))
+    sm = None if staleness_mean is None \
+        else staleness_mean.astype(jnp.float32)
+    return base._replace(participation_rate=rate,
+                         participation_drift=drift.astype(jnp.float32),
+                         staleness_mean=sm)
+
+
 def summarize(telemetry) -> Optional[dict]:
     """NaN-aware scalar summary of stacked RoundTelemetry arrays (numpy
     side, for ledgers/tables): mean of each probe over every axis, with
-    all-NaN (disabled) probes reported as None."""
+    all-NaN (disabled) probes reported as None and absent (None-valued)
+    service probes skipped."""
     if telemetry is None:
         return None
     import numpy as np
 
     out = {}
     for name, arr in zip(RoundTelemetry._fields, telemetry):
+        if arr is None:
+            continue
         a = np.asarray(arr, np.float64)
         finite = a[np.isfinite(a)]
         if finite.size:

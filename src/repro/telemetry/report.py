@@ -5,9 +5,11 @@
 Sections (each only when the ledger carries matching events): platform,
 compile counts, the per-scenario sweep table — measured ``avg_grad_sq``
 against the Theorem-1/2 floors with the distance-to-floor and the in-jit
-telemetry summaries (effective SNR, moment drift, grad-norm dispersion) —
-and the benchmark rows.  This is the human end of the observability
-pipeline: sweep/bench run -> ``Ledger`` -> this report.
+telemetry summaries (effective SNR, moment drift, grad-norm dispersion,
+and — for service scenarios — the realised participation rate and mean
+staleness) — the round-service commit log, and the benchmark rows.  This
+is the human end of the observability pipeline: sweep/bench/service run
+-> ``Ledger`` -> this report.
 """
 from __future__ import annotations
 
@@ -49,6 +51,11 @@ def _scenario_row(ev: Dict[str, Any]) -> Dict[str, Any]:
         "dist_to_floor": ev.get("distance_to_floor"),
         "snr": tel.get("snr"), "drift": tel.get("moment_drift"),
         "dispersion": tel.get("dispersion"),
+        # round-service probes: realised participation rate and mean
+        # replayed age (present only for scenarios run with an active
+        # ParticipationConfig / staleness replay)
+        "part_rate": tel.get("participation_rate"),
+        "staleness": tel.get("staleness_mean"),
     }
 
 
@@ -82,8 +89,18 @@ def render(events: List[Dict[str, Any]], title: str = "Run report") -> str:
         out += _table(
             ["tag", "env", "channel", "noise_sigma", "m_h_eff",
              "final_reward", "avg_grad_sq", "floor", "floor_which",
-             "dist_to_floor", "snr", "drift", "dispersion"],
+             "dist_to_floor", "snr", "drift", "dispersion",
+             "part_rate", "staleness"],
             [_scenario_row(ev) for ev in scenarios])
+        out.append("")
+
+    if "service" in by_kind:
+        out += ["## Round service", ""]
+        out += _table(
+            ["round_start", "round_end", "reward", "grad_sq", "gain_mean",
+             "participation_rate", "participation_drift", "staleness_mean",
+             "staleness_hist", "deadline_exceeded", "wall_us"],
+            by_kind["service"])
         out.append("")
 
     if "bench_row" in by_kind:

@@ -1,0 +1,392 @@
+"""Round-service suite (``repro.service`` + the service paths of
+``fedpg``/``event_triggered``).
+
+The contracts under test:
+
+* **Bitwise-off** — a participation config that can never drop an agent
+  (full, static ``rate >= 1``, ``subset >= N``) normalises away and the
+  emitted program is byte-identical to the plain run (jaxpr string pin +
+  value check), on ``fedpg.run`` and the event-triggered baseline alike.
+* **Block/shard invariance** — the per-round mask, the replay weights
+  and every normaliser scalar are derived from absolute agent ids before
+  the block scan, so the streamed service round is bitwise invariant to
+  ``agent_blocks`` (padded non-dividing fleets included) and to the
+  ``agent_mesh`` shard count.
+* **Empty rounds** — a round nobody makes commits an exact-zero update
+  (the AWGN draw is discarded, never amplified).
+* **Driver determinism** — a checkpoint/resume cycle replays the
+  identical key and mask streams: resumed state is bitwise equal to the
+  uninterrupted service.
+* **Cache keys** — participation/staleness key the compiled-callable
+  caches, and a normalised-away config hits the same entry as ``None``.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: only the property tests skip
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import event_triggered, fedpg
+from repro.core.channel import RayleighChannel
+from repro.core.ota import OTAConfig
+from repro.rl.env import LandmarkNav
+from repro.rl.policy import MLPPolicy
+from repro.service import participation as svc_participation
+from repro.service.driver import RoundService, ServiceConfig
+from repro.service.faults import CrashSchedule, FaultConfig, StragglerModel
+from repro.service.participation import ParticipationConfig
+from repro.service.staleness import StalenessConfig
+from repro.telemetry import Ledger, using_ledger
+from repro.telemetry.probes import TelemetryConfig
+
+N_DEV = jax.device_count()
+SMALL = dict(n_agents=7, batch_m=2, horizon=5, n_rounds=3)
+RAYLEIGH = OTAConfig(channel=RayleighChannel(), noise_sigma=1e-3, debias=True)
+BERN = ParticipationConfig(rate=0.5)
+STALE = StalenessConfig(max_age=2, decay=0.5)
+BLOCK_GRID = (1, 3, 4, 100)
+
+
+@pytest.fixture(scope="module")
+def env_pol():
+    return LandmarkNav(), MLPPolicy()
+
+
+def _bitwise(a, b, what=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+def _close(a, b, what="", rtol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=1e-7, err_msg=what)
+
+
+def _strip_addresses(jaxpr_text: str) -> str:
+    # function-object reprs in jvp_jaxpr_thunk params carry addresses
+    return re.sub(r"0x[0-9a-f]+", "0x", jaxpr_text)
+
+
+def _key_state(state):
+    """ServiceState with typed keys replaced by their raw bits so the
+    whole tree is numpy-comparable."""
+    return state._replace(part_key=jax.random.key_data(state.part_key),
+                          sched_key=jax.random.key_data(state.sched_key))
+
+
+# ---------------------------------------------------------------------------
+# bitwise-off: never-dropping configs emit the plain program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("uplink", ["exact", "rayleigh"])
+def test_full_participation_is_bitwise_off(env_pol, uplink, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ocfg = None if uplink == "exact" else RAYLEIGH
+    off_configs = [
+        ParticipationConfig(rate=1.0),
+        ParticipationConfig(kind="full"),
+        ParticipationConfig(kind="subset", subset=cfg.n_agents),
+        # inactive faults can't drop anyone either
+        ParticipationConfig(kind="full", faults=FaultConfig(
+            stragglers=StragglerModel(mean=1.0))),  # deadline=inf
+    ]
+    j_none = jax.make_jaxpr(
+        lambda k: fedpg.run(env, pol, cfg, k, ota=ocfg))(key)
+    for p in off_configs:
+        j_p = jax.make_jaxpr(
+            lambda k: fedpg.run(env, pol, cfg, k, ota=ocfg, participation=p,
+                                staleness=STALE))(key)
+        assert _strip_addresses(str(j_none)) == _strip_addresses(str(j_p)), p
+    ref = fedpg.run_jit(env, pol, cfg, key, ota=ocfg)
+    got = fedpg.run_jit(env, pol, cfg, key, ota=ocfg,
+                        participation=off_configs[0], staleness=STALE)
+    _bitwise(got, ref, "full participation must be byte-identical")
+
+
+def test_staleness_without_participation_is_off(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    j_none = jax.make_jaxpr(
+        lambda k: fedpg.run(env, pol, cfg, k, ota=RAYLEIGH))(key)
+    j_st = jax.make_jaxpr(
+        lambda k: fedpg.run(env, pol, cfg, k, ota=RAYLEIGH,
+                            staleness=STALE))(key)
+    assert _strip_addresses(str(j_none)) == _strip_addresses(str(j_st))
+
+
+# ---------------------------------------------------------------------------
+# block invariance of the streamed service round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("uplink", ["exact", "rayleigh"])
+@pytest.mark.parametrize("staleness", [None, STALE])
+def test_partial_block_invariance(env_pol, uplink, staleness, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    ocfg = None if uplink == "exact" else RAYLEIGH
+    tel = TelemetryConfig()
+    ref = None
+    for b in BLOCK_GRID:
+        got = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, participation=BERN,
+                            staleness=staleness, telemetry=tel,
+                            agent_blocks=b)
+        if ref is None:
+            ref = got
+        else:
+            _bitwise(got, ref, f"agent_blocks={b} vs {BLOCK_GRID[0]}")
+    # vs the stacked (vmap) form: identical PRNG/mask streams — the
+    # telemetry (participation rate/drift, staleness age) and gain_mean
+    # compare bitwise; sums reassociate, so updates compare tight-close
+    stacked = fedpg.run_jit(env, pol, cfg, key, ota=ocfg, participation=BERN,
+                            staleness=staleness, telemetry=tel)
+    _bitwise(stacked[1].telemetry.participation_rate,
+             ref[1].telemetry.participation_rate, "realised rate")
+    _bitwise(stacked[1].telemetry.participation_drift,
+             ref[1].telemetry.participation_drift, "debias drift")
+    if staleness is not None:
+        _bitwise(stacked[1].telemetry.staleness_mean,
+                 ref[1].telemetry.staleness_mean, "mean replayed age")
+    _bitwise(stacked[1].gain_mean, ref[1].gain_mean, "gain_mean")
+    _close(stacked[0], ref[0], "theta stacked-vs-streamed")
+
+
+@settings(max_examples=4, deadline=None)
+@given(rate=st.floats(min_value=0.2, max_value=0.9),
+       b1=st.sampled_from(BLOCK_GRID), b2=st.sampled_from(BLOCK_GRID),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_block_invariance(rate, b1, b2, seed):
+    env, pol = LandmarkNav(), MLPPolicy()
+    cfg = fedpg.FedPGConfig(n_agents=5, batch_m=1, horizon=4, n_rounds=2)
+    p = ParticipationConfig(rate=rate)
+    k = jax.random.key(seed)
+    a = fedpg.run_jit(env, pol, cfg, k, ota=RAYLEIGH, participation=p,
+                      staleness=STALE, agent_blocks=b1)
+    b = fedpg.run_jit(env, pol, cfg, k, ota=RAYLEIGH, participation=p,
+                      staleness=STALE, agent_blocks=b2)
+    _bitwise(a, b, f"blocks {b1} vs {b2} at rate {rate}")
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs an emulated device mesh")
+def test_partial_shard_invariance(env_pol, key):
+    from repro.core.distribute import agent_mesh_for
+
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)  # N=7: mesh does not divide the fleet
+    tel = TelemetryConfig()
+    mesh = agent_mesh_for(min(N_DEV, 4))
+    stacked = fedpg.run(env, pol, cfg, key, ota=RAYLEIGH, participation=BERN,
+                        telemetry=tel)
+    sharded = fedpg.run(env, pol, cfg, key, ota=RAYLEIGH, participation=BERN,
+                        telemetry=tel, agent_mesh=mesh, agent_blocks=2)
+    # the counter-PRNG mask is derived from absolute ids on every form
+    _bitwise(stacked[1].telemetry.participation_rate,
+             sharded[1].telemetry.participation_rate,
+             "mask must be shard-invariant")
+    _bitwise(stacked[1].telemetry.participation_drift,
+             sharded[1].telemetry.participation_drift)
+
+
+# ---------------------------------------------------------------------------
+# semantics: subset rotation, empty rounds, staleness indexing
+# ---------------------------------------------------------------------------
+
+def test_subset_round_robin_rate(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    p = ParticipationConfig(kind="subset", subset=3)
+    _, hist = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                            participation=p, telemetry=TelemetryConfig())
+    rate = np.asarray(hist.telemetry.participation_rate)
+    # exactly w participants every round, rotating deterministically
+    assert np.all(rate == rate[0])
+    np.testing.assert_allclose(rate, 3.0 / cfg.n_agents, rtol=1e-6)
+
+
+@pytest.mark.parametrize("debias", ["realized", "expected"])
+def test_empty_rounds_commit_zero_update(env_pol, debias, key):
+    # everyone crashes every round: W == 0, the update must be an exact
+    # zero (AWGN discarded) and theta must never move
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    p = ParticipationConfig(kind="full", debias=debias, faults=FaultConfig(
+        crashes=CrashSchedule(frac=1.0, period=1, down=1)))
+    theta0 = pol.init(jax.random.split(key, 3)[0])
+    theta, hist = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                                participation=p)
+    _bitwise(theta, theta0, "empty rounds must not move theta")
+    assert np.all(np.asarray(hist.grad_sq) == 0.0)
+    assert np.all(np.asarray(hist.gain_mean) == 0.0)
+
+
+def test_stale_buffer_absolute_index_padded_fleet(env_pol, key):
+    # N=7 with block 4 pads a phantom row; the replay buffer must stay
+    # indexed by absolute agent id (bitwise equal to the unpadded block 1)
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    tel = TelemetryConfig()
+    runs = [fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                          participation=ParticipationConfig(rate=0.3),
+                          staleness=StalenessConfig(max_age=3, decay=0.9),
+                          telemetry=tel, agent_blocks=b) for b in (1, 4)]
+    _bitwise(runs[0], runs[1], "padded stale buffer must be bitwise")
+    # staleness replay changes the update vs no-staleness at equal masks
+    bare = fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                         participation=ParticipationConfig(rate=0.3),
+                         telemetry=tel, agent_blocks=1)
+    assert not np.array_equal(np.asarray(runs[0][1].grad_sq),
+                              np.asarray(bare[1].grad_sq))
+
+
+# ---------------------------------------------------------------------------
+# compiled-callable cache keys
+# ---------------------------------------------------------------------------
+
+def test_cache_keys_include_service_configs(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    fedpg.clear_compilation_cache()
+    fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH)
+    assert fedpg._compiled_run.cache_info().misses == 1
+    # a normalised-away config must hit the same entry as None
+    fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH,
+                  participation=ParticipationConfig(rate=1.0),
+                  staleness=STALE)
+    info = fedpg._compiled_run.cache_info()
+    assert (info.misses, info.hits) == (1, 1)
+    # an active config is a different program
+    fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH, participation=BERN)
+    assert fedpg._compiled_run.cache_info().misses == 2
+    # ...and so is each staleness depth
+    fedpg.run_jit(env, pol, cfg, key, ota=RAYLEIGH, participation=BERN,
+                  staleness=STALE)
+    assert fedpg._compiled_run.cache_info().misses == 3
+
+
+# ---------------------------------------------------------------------------
+# event-triggered baseline under participation
+# ---------------------------------------------------------------------------
+
+def test_et_full_participation_bitwise(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    et = event_triggered.ETConfig(tau=0.05)
+    j_none = jax.make_jaxpr(
+        lambda k: event_triggered.run(env, pol, cfg, et, k))(key)
+    j_full = jax.make_jaxpr(
+        lambda k: event_triggered.run(
+            env, pol, cfg, et, k,
+            participation=ParticipationConfig(rate=1.0)))(key)
+    assert _strip_addresses(str(j_none)) == _strip_addresses(str(j_full))
+    ref = event_triggered.run_jit(env, pol, cfg, et, key)
+    got = event_triggered.run_jit(env, pol, cfg, et, key,
+                                  participation=ParticipationConfig(kind="full"))
+    _bitwise(got, ref)
+
+
+@pytest.mark.parametrize("agent_blocks", [None, 3])
+def test_et_participation_gates_triggers(env_pol, agent_blocks, key):
+    # with tau=0 every *participant* triggers, so the upload count must
+    # equal the realised participating count of the service mask stream —
+    # pinning the exact key derivation (split(key,3) -> split(key_svc))
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    et = event_triggered.ETConfig(tau=0.0)
+    _, hist = event_triggered.run_jit(env, pol, cfg, et, key,
+                                      participation=BERN,
+                                      agent_blocks=agent_blocks)
+    _, _, key_svc = jax.random.split(key, 3)
+    part_key, sched_key = jax.random.split(key_svc)
+    ids = jnp.arange(cfg.n_agents, dtype=jnp.int32)
+    expect = [
+        float(jnp.sum(svc_participation.round_mask(
+            BERN, part_key, sched_key, jnp.int32(r), ids, cfg.n_agents)))
+        for r in range(cfg.n_rounds)
+    ]
+    np.testing.assert_array_equal(np.asarray(hist.uploads), expect)
+    # non-participating rounds exist in this stream (rate 0.5, N=7)
+    assert min(expect) < cfg.n_agents
+
+
+# ---------------------------------------------------------------------------
+# the host-side driver: determinism, checkpoint/resume, ledger
+# ---------------------------------------------------------------------------
+
+def _make_service(env, pol, key, tmpdir="", max_rounds=8):
+    cfg = fedpg.FedPGConfig(n_agents=7, batch_m=1, horizon=4, n_rounds=1)
+    return RoundService(
+        env, pol, cfg, key, participation=BERN, staleness=STALE, ota=RAYLEIGH,
+        telemetry=TelemetryConfig(), agent_blocks=3,
+        service=ServiceConfig(rounds_per_commit=2, max_rounds=max_rounds,
+                              checkpoint_dir=str(tmpdir)))
+
+
+def test_driver_requires_active_participation(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(**SMALL)
+    with pytest.raises(ValueError, match="active participation"):
+        RoundService(env, pol, cfg, key,
+                     participation=ParticipationConfig(rate=1.0))
+
+
+def test_driver_checkpoint_resume_bitwise(env_pol, key, tmp_path):
+    env, pol = env_pol
+    # uninterrupted reference: 8 rounds in 4 commits
+    ref = _make_service(env, pol, key)
+    recs = ref.run()
+    assert len(recs) == 4 and recs[-1]["round_end"] == 8
+    # interrupted twin: 2 commits + checkpoint, then a FRESH service
+    # resumes and finishes — state must be bitwise identical
+    a = _make_service(env, pol, key, tmp_path)
+    a.commit(), a.commit()
+    b = _make_service(env, pol, key, tmp_path)
+    assert b.resume()
+    assert int(b.state.round_idx) == 4
+    b.run()
+    _bitwise(_key_state(b.state), _key_state(ref.state),
+             "resumed service must replay the identical stream")
+
+
+def test_driver_ledger_and_report(env_pol, key, tmp_path):
+    from repro.telemetry import report as trep
+    from repro.telemetry.ledger import read_ledger
+
+    env, pol = env_pol
+    path = str(tmp_path / "ledger.jsonl")
+    with Ledger(path) as led, using_ledger(led):
+        svc = _make_service(env, pol, key, max_rounds=4)
+        svc.run()
+    events = [e for e in read_ledger(path) if e["kind"] == "service"]
+    assert len(events) == 2
+    for ev in events:
+        assert {"round_start", "round_end", "reward", "grad_sq",
+                "participation_rate", "participation_drift",
+                "staleness_hist", "wall_us"} <= set(ev)
+        assert 0.0 <= ev["participation_rate"] <= 1.0
+        # N=7 agents distributed over age buckets 0..max_age+1
+        assert sum(ev["staleness_hist"]) == 7
+    text = trep.render(read_ledger(path))
+    assert "## Round service" in text
+    assert "participation_rate" in text
+
+
+def test_driver_deadline_flag(env_pol, key):
+    env, pol = env_pol
+    cfg = fedpg.FedPGConfig(n_agents=3, batch_m=1, horizon=3, n_rounds=1)
+    svc = RoundService(
+        env, pol, cfg, key, participation=BERN,
+        service=ServiceConfig(rounds_per_commit=1, max_rounds=1,
+                              round_deadline_s=1e-9))
+    rec = svc.commit()
+    assert rec.get("deadline_exceeded") is True and rec["per_round_s"] > 0
